@@ -1,0 +1,19 @@
+"""Paper Table I + Fig. 5: relative L2/L1 errors of denormalized predictions
+and R^2 of the integrated force, on the synthetic DrivAerML proxy (DESIGN.md
+S8 — absolute values are not comparable to the paper's, the pipeline is)."""
+from repro.configs import get_config
+from repro.launch.train import eval_gnn, train_gnn
+
+
+def run():
+    cfg = get_config("xmgn-drivaer").reduced().replace(
+        levels=(256, 512, 1024), n_partitions=4)
+    params, losses, (train, test, ni, no) = train_gnn(
+        cfg, steps=150, n_samples=16, log_every=50)
+    m = eval_gnn(cfg, params, test, ni, no)
+    rows = [("accuracy_train_loss_final", 0.0, f"{losses[-1]:.5f}")]
+    for q in ("pressure", "tau_x", "tau_y", "tau_z"):
+        rows.append((f"accuracy_{q}_relL2", 0.0, f"{m[q]['rel_l2']:.4f}"))
+        rows.append((f"accuracy_{q}_relL1", 0.0, f"{m[q]['rel_l1']:.4f}"))
+    rows.append(("accuracy_force_r2", 0.0, f"{m['force_r2']:.4f}"))
+    return rows

@@ -1,0 +1,51 @@
+"""Paper SIII-A core claim as a benchmark: max |grad_partitioned - grad_full|
+per partition count, plus step time. (The 'table' behind the equivalence
+statements in the text.)"""
+import jax
+import numpy as np
+
+from benchmarks.common import timeit
+from repro.configs.base import GNNConfig
+from repro.core import halo, partitioning
+from repro.core.gradient_aggregation import aggregate_gradients, partition_batch
+from repro.core.graph_build import knn_edges
+from repro.models import meshgraphnet as mgn
+
+
+def run():
+    rng = np.random.default_rng(0)
+    n, k, L = 800, 6, 4
+    pos = rng.random((n, 3)).astype(np.float32)
+    s, r = knn_edges(pos, k)
+    cfg = GNNConfig(node_in=6, edge_in=4, node_out=4, hidden=64,
+                    n_mp_layers=L, halo=L)
+    params = mgn.init(jax.random.PRNGKey(0), cfg)
+    nf = rng.normal(size=(n, 6)).astype(np.float32)
+    rel = pos[s] - pos[r]
+    ef = np.concatenate([rel, np.linalg.norm(rel, axis=1, keepdims=True)],
+                        1).astype(np.float32)
+    tg = rng.normal(size=(n, 4)).astype(np.float32)
+    denom = float(n * 4)
+    full = {"node_feats": nf, "edge_feats": ef, "senders": s, "receivers": r,
+            "targets": tg, "loss_mask": np.ones(n, np.float32)}
+    gfn_full = jax.jit(jax.value_and_grad(
+        lambda p: mgn.loss_fn(p, cfg, full, denom=denom)))
+    _, full_grads = gfn_full(params)
+    rows = []
+    for P in (2, 4, 8, 16):
+        labels = partitioning.partition(s, r, n, P, positions=pos)
+        parts = halo.build_partitions(s, r, labels, P, L)
+
+        def grad_fn(p, b):
+            return jax.value_and_grad(
+                lambda q: mgn.loss_fn(q, cfg, b, denom=denom))(p)
+        batches = [partition_batch(pp, nf, ef, tg) for pp in parts]
+
+        def step():
+            return aggregate_gradients(jax.jit(grad_fn), params, batches)
+        _, grads = step()
+        gdiff = max(jax.tree_util.tree_leaves(jax.tree_util.tree_map(
+            lambda a, b: float(np.max(np.abs(a - b))), grads, full_grads)))
+        us = timeit(lambda: jax.block_until_ready(step()[0]), iters=2)
+        rows.append((f"equivalence_P{P}_maxgraddiff", us, f"{gdiff:.3e}"))
+    return rows

@@ -1,0 +1,71 @@
+"""Paper Fig. 6: activation checkpointing trade-off. GPU offloading maps to
+remat policies on TPU (DESIGN.md S4): we compile the same partitioned train
+step under three policies and report temp bytes (memory) and HLO flops
+(compute cost of recomputation)."""
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import GNNConfig
+from repro.data import pipeline as pipe
+from repro.models import meshgraphnet as mgn
+from repro.models import nn
+from repro.optim.adam import AdamConfig, adam_init, adam_update
+
+def _policies():
+    p = {
+        "none": None,
+        "dots": jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+        "full": jax.checkpoint_policies.nothing_saveable,
+    }
+    try:
+        # the paper's Fig-6 offload-to-host variant, expressed natively:
+        # dot outputs are checkpointed into host ("pinned_host") memory
+        p["offload_host"] = jax.checkpoint_policies.offload_dot_with_no_batch_dims(
+            "device", "pinned_host")
+    except Exception:
+        pass
+    return p
+
+
+POLICIES = _policies()
+
+
+def run():
+    cfg = GNNConfig().reduced().replace(hidden=64, n_mp_layers=6, halo=6,
+                                        levels=(512, 1024, 2048))
+    s = pipe.build_sample(cfg, 0)
+    ps = pipe.partition_sample(cfg, s, n_partitions=2)
+    one = jax.tree_util.tree_map(lambda x: jnp.asarray(x[0]), ps.stacked)
+    rows = []
+    for name, policy in POLICIES.items():
+        params = mgn.init(jax.random.PRNGKey(0), cfg)
+        opt = adam_init(params)
+        opt_cfg = AdamConfig()
+
+        loss_fn = lambda p, b: mgn.loss_fn(p, cfg, b, denom=ps.denom)
+        if policy is not None:
+            loss_fn = jax.checkpoint(loss_fn, policy=policy)
+
+        def step(params, opt, batch):
+            loss, grads = jax.value_and_grad(
+                lambda p: loss_fn(p, batch))(params)
+            params, opt, _ = adam_update(opt_cfg, grads, opt, params)
+            return params, opt, loss
+
+        try:
+            c = jax.jit(step).lower(params, opt, one).compile()
+        except Exception as e:
+            rows.append((f"remat_{name}_tempbytes", 0.0,
+                         f"unsupported_on_backend:{type(e).__name__}"))
+            continue
+        m = c.memory_analysis()
+        ca = c.cost_analysis() or {}
+        host = getattr(m, "host_temp_size_in_bytes", 0)
+        rows.append((f"remat_{name}_tempbytes", 0.0,
+                     f"{m.temp_size_in_bytes}"))
+        rows.append((f"remat_{name}_hloflops", 0.0,
+                     f"{ca.get('flops', 0):.3e}"))
+        if host:
+            rows.append((f"remat_{name}_host_offloaded_bytes", 0.0,
+                         f"{host}"))
+    return rows

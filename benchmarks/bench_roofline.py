@@ -1,0 +1,32 @@
+"""Roofline summary: reads the dry-run artifacts (results/dryrun_sp, _mp)
+produced by repro.launch.dryrun and emits one row per (arch, shape, mesh)."""
+import glob
+import json
+import os
+
+
+def run():
+    rows = []
+    for mesh_dir in ("results/dryrun_sp", "results/dryrun_mp"):
+        for f in sorted(glob.glob(os.path.join(mesh_dir, "*.json"))):
+            r = json.load(open(f))
+            tag = f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}"
+            if "skipped" in r:
+                rows.append((tag, 0.0, "skipped_documented"))
+                continue
+            if "error" in r:
+                rows.append((tag, 0.0, f"ERROR:{r['error'][:60]}"))
+                continue
+            rl = r["roofline"]
+            t_total = max(rl["t_compute_s"], rl["t_memory_s"],
+                          rl["t_collective_s"])
+            rows.append((tag, t_total * 1e6,
+                         f"dominant={rl['dominant']};"
+                         f"tc={rl['t_compute_s']:.2e};"
+                         f"tm={rl['t_memory_s']:.2e};"
+                         f"tx={rl['t_collective_s']:.2e};"
+                         f"useful={r.get('useful_flops_ratio', 0):.3f}"))
+    if not rows:
+        rows.append(("roofline_missing", 0.0,
+                     "run python -m repro.launch.dryrun --all first"))
+    return rows

@@ -1,0 +1,25 @@
+"""Shared helpers for the benchmark suite."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def timeit(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall time per call in microseconds (CPU functional timing —
+    NOT TPU performance; roofline-derived TPU estimates are separate)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def emit(rows):
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

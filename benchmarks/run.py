@@ -1,0 +1,60 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  bench_equivalence     SIII-A equivalence claim (grad deltas vs partitions)
+  bench_memory_scaling  Fig. 7 (compiled memory vs partition count)
+  bench_remat           Fig. 6 (activation checkpointing trade-off)
+  bench_strong_scaling  Fig. 8 (X-MGN vs D-MGN comm volume, 8..512 ranks)
+  bench_accuracy        Table I + Fig. 5 (proxy dataset, DESIGN.md S8)
+  bench_ablation        Fig. 9 (levels / hidden / degree / Fourier)
+  bench_kernels         Pallas kernels vs references + modeled TPU time
+  bench_roofline        SRoofline summary from the dry-run artifacts
+
+Prints ``name,us_per_call,derived`` CSV. Select with --only <substring>.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks.common import emit
+
+MODULES = [
+    "bench_equivalence",
+    "bench_memory_scaling",
+    "bench_remat",
+    "bench_strong_scaling",
+    "bench_kernels",
+    "bench_roofline",
+    "bench_accuracy",
+    "bench_ablation",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="run only benchmarks whose name contains this")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod_name in MODULES:
+        if args.only and args.only not in mod_name:
+            continue
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
+            emit(mod.run())
+            print(f"# {mod_name} done in {time.time() - t0:.1f}s",
+                  file=sys.stderr, flush=True)
+        except Exception:
+            failures += 1
+            print(f"# {mod_name} FAILED:", file=sys.stderr)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

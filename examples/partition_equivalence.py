@@ -1,0 +1,60 @@
+"""The paper's core claim, demonstrated end to end: training on halo
+partitions with gradient aggregation is EXACTLY equivalent to full-graph
+training — while needing only 1/P of the activation memory.
+
+Run:  PYTHONPATH=src python examples/partition_equivalence.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import GNNConfig
+from repro.core import halo, partitioning
+from repro.core.gradient_aggregation import (aggregate_gradients,
+                                             partition_batch)
+from repro.core.graph_build import knn_edges
+from repro.models import meshgraphnet as mgn
+
+
+def main():
+    rng = np.random.default_rng(0)
+    n, k, L = 600, 6, 4
+    pos = rng.random((n, 3)).astype(np.float32)
+    senders, receivers = knn_edges(pos, k)
+    cfg = GNNConfig(node_in=6, edge_in=4, node_out=4, hidden=64,
+                    n_mp_layers=L, halo=L)
+    params = mgn.init(jax.random.PRNGKey(0), cfg)
+    nf = rng.normal(size=(n, 6)).astype(np.float32)
+    rel = pos[senders] - pos[receivers]
+    ef = np.concatenate([rel, np.linalg.norm(rel, axis=1, keepdims=True)],
+                        1).astype(np.float32)
+    tg = rng.normal(size=(n, 4)).astype(np.float32)
+    denom = float(n * 4)
+    full = {"node_feats": nf, "edge_feats": ef, "senders": senders,
+            "receivers": receivers, "targets": tg,
+            "loss_mask": np.ones(n, np.float32)}
+    full_loss, full_grads = jax.value_and_grad(
+        lambda p: mgn.loss_fn(p, cfg, full, denom=denom))(params)
+
+    print(f"full graph: {n} nodes, {len(senders)} edges, loss={float(full_loss):.6f}")
+    for P in (2, 4, 8):
+        labels = partitioning.partition(senders, receivers, n, P, positions=pos)
+        parts = halo.build_partitions(senders, receivers, labels, P, L)
+        stats = halo.halo_overhead(parts, n)
+
+        def grad_fn(p, b):
+            return jax.value_and_grad(
+                lambda q: mgn.loss_fn(q, cfg, b, denom=denom))(p)
+        batches = [partition_batch(pp, nf, ef, tg) for pp in parts]
+        loss, grads = aggregate_gradients(grad_fn, params, batches)
+        gdiff = max(jax.tree_util.tree_leaves(jax.tree_util.tree_map(
+            lambda a, b: float(np.max(np.abs(a - b))), grads, full_grads)))
+        print(f"P={P}: loss diff={abs(float(loss - full_loss)):.2e}, "
+              f"max grad diff={gdiff:.2e}, "
+              f"max partition nodes={stats['max_nodes']} "
+              f"({stats['max_nodes'] / n:.0%} of full graph), "
+              f"halo fraction={stats['halo_fraction']:.0%}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Quickstart: train X-MeshGraphNet on synthetic car aerodynamics.
+
+Builds multi-scale k-NN graphs from parametric car geometries (no simulation
+mesh!), partitions them with halo regions, trains with gradient aggregation,
+and reports the paper's Table-I-style relative errors on held-out cars.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import json
+
+from repro.configs import get_config
+from repro.launch.train import eval_gnn, train_gnn
+
+
+def main():
+    cfg = get_config("xmgn-drivaer").reduced()
+    print(f"config: {cfg.levels} points/level, k={cfg.k_neighbors}, "
+          f"{cfg.n_mp_layers} MP layers, {cfg.n_partitions} partitions, "
+          f"halo={cfg.halo}")
+    params, losses, (train, test, ni, no) = train_gnn(
+        cfg, steps=60, n_samples=8, ckpt_path="/tmp/xmgn_quickstart.msgpack")
+    print(f"loss: {losses[0]:.4f} -> {losses[-1]:.4f}")
+    metrics = eval_gnn(cfg, params, test, ni, no)
+    print(json.dumps(metrics, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""repro — X-MeshGraphNet: scalable multi-scale GNNs for physics simulation.
+
+A production-style JAX framework implementing the paper's halo-partitioned
+training scheme, plus a multi-architecture model zoo, multi-pod dry-run, and
+roofline tooling. See DESIGN.md.
+"""
+
+__version__ = "0.1.0"

@@ -1,0 +1,77 @@
+"""Msgpack-based pytree checkpointing (no orbax dependency).
+
+Arrays are serialized as (dtype, shape, raw bytes); the pytree structure is
+encoded as nested msgpack maps/lists. Exact roundtrip is tested.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+_ARR = "__ndarray__"
+_TUP = "__tuple__"
+
+
+def _np_dtype(name: str) -> np.dtype:
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes  # bfloat16 & friends
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def _pack(obj: Any):
+    if isinstance(obj, (jax.Array, np.ndarray)):
+        a = np.asarray(obj)
+        return {_ARR: True, "dtype": a.dtype.name, "shape": list(a.shape), "data": a.tobytes()}
+    if isinstance(obj, dict):
+        return {str(k): _pack(v) for k, v in obj.items()}
+    if isinstance(obj, tuple):
+        return {_TUP: [_pack(v) for v in obj]}
+    if isinstance(obj, list):
+        return [_pack(v) for v in obj]
+    if isinstance(obj, (int, float, str, bool)) or obj is None:
+        return obj
+    if hasattr(obj, "_asdict"):  # NamedTuple
+        return {_TUP: [_pack(v) for v in obj]}
+    raise TypeError(f"cannot checkpoint object of type {type(obj)}")
+
+
+def _unpack(obj: Any):
+    if isinstance(obj, dict):
+        if obj.get(_ARR):
+            a = np.frombuffer(obj["data"], dtype=_np_dtype(obj["dtype"])).reshape(obj["shape"])
+            return jnp.asarray(a)
+        if _TUP in obj:
+            return tuple(_unpack(v) for v in obj[_TUP])
+        return {k: _unpack(v) for k, v in obj.items()}
+    if isinstance(obj, list):
+        return [_unpack(v) for v in obj]
+    return obj
+
+
+def save(path: str, tree: Any) -> None:
+    """Atomically write a pytree checkpoint."""
+    payload = msgpack.packb(_pack(tree), use_bin_type=True)
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=d)
+    try:
+        with os.fdopen(fd, "wb") as f:
+            f.write(payload)
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+
+
+def restore(path: str) -> Any:
+    with open(path, "rb") as f:
+        return _unpack(msgpack.unpackb(f.read(), raw=False, strict_map_key=False))

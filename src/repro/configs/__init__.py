@@ -1,0 +1,37 @@
+"""Config registry: one module per assigned architecture + the paper's own."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (GNNConfig, HardwareSpec, HW, ModelConfig,
+                                MoEConfig, SHAPES, ShapeConfig, SSMConfig,
+                                UNetConfig)
+
+_ARCH_MODULES = {
+    "starcoder2-15b": "starcoder2_15b",
+    "pixtral-12b": "pixtral_12b",
+    "whisper-large-v3": "whisper_large_v3",
+    "granite-3-8b": "granite_3_8b",
+    "deepseek-moe-16b": "deepseek_moe_16b",
+    "yi-34b": "yi_34b",
+    "gemma2-9b": "gemma2_9b",
+    "xlstm-350m": "xlstm_350m",
+    "qwen3-moe-30b-a3b": "qwen3_moe_30b_a3b",
+    "zamba2-2.7b": "zamba2_2_7b",
+    "xmgn-drivaer": "xmgn_drivaer",
+    "xunet3d-drivaer": "xunet3d_drivaer",
+}
+
+ASSIGNED_ARCHS = [k for k in _ARCH_MODULES
+                  if k not in ("xmgn-drivaer", "xunet3d-drivaer")]
+
+
+def get_config(name: str):
+    if name not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_ARCH_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[name]}")
+    return mod.CONFIG
+
+
+def list_configs():
+    return {name: get_config(name) for name in _ARCH_MODULES}

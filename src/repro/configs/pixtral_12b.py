@@ -1,0 +1,20 @@
+"""Pixtral-12B [hf:mistralai/Pixtral-12B-2409] — VLM: Pixtral-ViT frontend
+(STUBBED: input_specs supplies patch embeddings) + Mistral-Nemo-style decoder.
+GQA(kv=8), head_dim=128, SwiGLU, RMSNorm."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="pixtral-12b",
+    family="vlm",
+    n_layers=40,
+    d_model=5120,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=131072,
+    rope_theta=1e6,
+    frontend="vision",
+    n_frontend_tokens=1024,       # stubbed ViT patch embeddings
+    source="hf:mistralai/Pixtral-12B-2409",
+)

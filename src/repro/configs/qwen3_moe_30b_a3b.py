@@ -1,0 +1,28 @@
+"""Qwen3-30B-A3B [hf:Qwen/Qwen3-30B-A3B] — 128 experts top-8 MoE, GQA(kv=4),
+QK-RMSNorm, head_dim=128."""
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-30b-a3b",
+    family="moe",
+    n_layers=48,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=4,
+    head_dim=128,
+    d_ff=768,                      # per-expert hidden
+    vocab_size=151936,
+    rope_theta=1e6,
+    qk_norm=True,
+    moe=MoEConfig(
+        n_experts=128,
+        top_k=8,
+        d_ff_expert=768,
+    ),
+    # SPerf iteration 5 tried param_sharding="tp_zero1" here: REFUTED —
+    # tx unchanged (collectives are activation-side, not param gathers) and
+    # TP-only params + f32 Adam don't fit 16 GB HBM. Keep FSDP+TP.
+    grad_accum=4,   # SPerf iteration 8: halves MoE dispatch-buffer activation
+                    # memory so train_4k fits 16 GB/chip
+    source="hf:Qwen/Qwen3-30B-A3B",
+)

@@ -1,0 +1,30 @@
+"""xLSTM-350M [arXiv:2405.04517] — sLSTM + mLSTM blocks (1 sLSTM per 4
+blocks), O(1) recurrent state => long_500k decode is natural."""
+from repro.configs.base import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-350m",
+    family="ssm",
+    n_layers=24,
+    d_model=1024,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=0,                        # blocks carry their own up/down projections
+    vocab_size=50304,
+    use_rope=False,
+    ssm=SSMConfig(
+        kind="xlstm",
+        d_conv=4,
+        expand=2,
+        chunk_size=64,
+        n_ssm_heads=4,
+        slstm_every=4,
+    ),
+    supports_long_context=True,
+    # SPerf iteration 3: at 350M params, tensor parallelism over 16 chips is
+    # pure overhead (activation all-gathers dwarf the matmuls) — run the
+    # model data-parallel-only; params+Adam state replicate comfortably.
+    param_sharding="dp",
+    serve_param_sharding="dp",
+    source="arXiv:2405.04517",
+)

@@ -1,0 +1,30 @@
+"""Zamba2-2.7B [arXiv:2411.15242] — hybrid: Mamba2 blocks + ONE shared
+attention+FFN block applied every 6 layers (9 occurrences, distinct KV
+caches). ssm_state=64. Deviation (DESIGN.md): per-occurrence LoRA deltas on
+the shared block are omitted. Mamba2 state is O(1) in sequence length =>
+long_500k runs (attention occurrences read a data/model-sharded 500k cache)."""
+from repro.configs.base import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-2.7b",
+    family="hybrid",
+    n_layers=54,                   # 9 superblocks x (5 mamba2 + 1 shared attn)
+    d_model=2560,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=80,
+    d_ff=10240,                    # shared attention block's FFN
+    vocab_size=32000,
+    rope_theta=1e4,
+    ssm=SSMConfig(
+        kind="mamba2",
+        d_state=64,
+        d_conv=4,
+        expand=2,
+        chunk_size=64,
+        n_ssm_heads=80,            # d_inner 5120 / head_dim 64
+    ),
+    attn_every=6,
+    supports_long_context=True,
+    source="arXiv:2411.15242",
+)

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for flash attention (exact softmax attention)."""
+import math
+from typing import Optional
+
+import jax.numpy as jnp
+import jax
+
+
+def attention(q, k, v, *, group_size: int = 1, causal: bool = True,
+              window: Optional[int] = None, softcap: Optional[float] = None):
+    """q: (BH, Sq, hd); k, v: (BH//group_size, Skv, hd) -> (BH, Sq, hd)."""
+    bh, sq, hd = q.shape
+    skv = k.shape[1]
+    kf = jnp.repeat(k, group_size, axis=0)
+    vf = jnp.repeat(v, group_size, axis=0)
+    s = jnp.einsum("hqd,hkd->hqk", q.astype(jnp.float32),
+                   kf.astype(jnp.float32)) / math.sqrt(hd)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    qp = jnp.arange(sq)[:, None]
+    kp = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= qp >= kp
+    if window is not None:
+        mask &= (qp - kp) < window
+    s = jnp.where(mask[None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("hqk,hkd->hqd", w, vf.astype(jnp.float32)).astype(q.dtype)

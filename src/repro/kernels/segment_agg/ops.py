@@ -1,0 +1,83 @@
+"""Jitted wrapper + preprocessing for the segment aggregation kernel.
+
+``prepare()`` runs ONCE per graph (numpy): sort edges by destination and pad
+so every node block of ``block_n`` nodes owns a fixed number EBLK of message
+rows. ``segment_sum_prepared()`` then runs per message-passing layer: an XLA
+gather (permutation) + the Pallas one-hot-matmul kernel.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.segment_agg.kernel import (DEFAULT_BLOCK_D,
+                                              DEFAULT_BLOCK_N,
+                                              segment_agg_call)
+
+
+@dataclass(frozen=True)
+class SegmentPrep:
+    perm: np.ndarray           # (NB*EBLK,) i32 indices into messages (0 for pad)
+    perm_valid: np.ndarray     # (NB*EBLK, 1) f32 1=real row
+    dest_local: np.ndarray     # (NB*EBLK, 1) i32 in-block dest, -1 for pad
+    n_blocks: int
+    block_n: int
+    n_segments: int
+
+    @property
+    def pad_rows(self) -> int:
+        return int(self.perm.shape[0])
+
+
+def prepare(segment_ids: np.ndarray, num_segments: int,
+            block_n: int = DEFAULT_BLOCK_N) -> SegmentPrep:
+    """Sort edge->segment assignments into fixed-size per-node-block runs."""
+    segment_ids = np.asarray(segment_ids)
+    e = segment_ids.shape[0]
+    nb = max(1, -(-num_segments // block_n))
+    order = np.argsort(segment_ids, kind="stable")
+    sorted_seg = segment_ids[order]
+    block_of = sorted_seg // block_n
+    counts = np.bincount(block_of, minlength=nb)
+    eblk = int(counts.max()) if e else 1
+    # round EBLK to a lane multiple for MXU efficiency
+    eblk = max(128, int(-(-eblk // 128) * 128))
+    perm = np.zeros((nb * eblk,), np.int32)
+    valid = np.zeros((nb * eblk, 1), np.float32)
+    dest = np.full((nb * eblk, 1), -1, np.int32)
+    start = 0
+    for b in range(nb):
+        c = int(counts[b])
+        rows = order[start:start + c]
+        perm[b * eblk: b * eblk + c] = rows
+        valid[b * eblk: b * eblk + c] = 1.0
+        dest[b * eblk: b * eblk + c, 0] = segment_ids[rows] - b * block_n
+        start += c
+    return SegmentPrep(perm=perm, perm_valid=valid, dest_local=dest,
+                       n_blocks=nb, block_n=block_n, n_segments=num_segments)
+
+
+def segment_sum_prepared(prep: SegmentPrep, messages, *,
+                         block_d: int = DEFAULT_BLOCK_D,
+                         interpret: bool = True):
+    """messages: (E, D) -> (n_segments, D) scatter-add via the Pallas kernel."""
+    d = messages.shape[-1]
+    pad_d = -(-d // 128) * 128 if d % 128 else d
+    gathered = messages[jnp.asarray(prep.perm)]
+    gathered = gathered * jnp.asarray(prep.perm_valid, gathered.dtype)
+    if pad_d != d:
+        gathered = jnp.pad(gathered, ((0, 0), (0, pad_d - d)))
+    out = segment_agg_call(gathered, jnp.asarray(prep.dest_local),
+                           prep.n_blocks, block_n=prep.block_n,
+                           block_d=min(block_d, pad_d), interpret=interpret)
+    return out[: prep.n_segments, :d]
+
+
+def segment_sum(messages, segment_ids, num_segments: int, *,
+                interpret: bool = True):
+    """Convenience one-shot API (does numpy prep; not jit-friendly —
+    use prepare()/segment_sum_prepared() inside training loops)."""
+    prep = prepare(np.asarray(segment_ids), num_segments)
+    return segment_sum_prepared(prep, messages, interpret=interpret)

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the segment aggregation kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def segment_sum(messages, segment_ids, num_segments: int):
+    """messages: (E, D); segment_ids: (E,) int32 in [0, num_segments).
+    Returns (num_segments, D)."""
+    return jax.ops.segment_sum(messages, segment_ids,
+                               num_segments=num_segments)

@@ -1,0 +1,204 @@
+"""Sharding rules: param-path regex -> PartitionSpec (MaxText-style logical
+axis rules), plus batch/cache specs per input shape.
+
+Conventions (mesh axes: optional 'pod', 'data', 'model'):
+* TP ('tp'): weight output-feature dims on 'model'.
+* FSDP+TP ('fsdp_tp'): additionally shard the other big dim on 'data' —
+  required for >=10B-param archs so Adam state fits 16 GB/chip.
+* Axes are dropped (replicated) when the dim is not divisible by the axis
+  size — a deliberate conservative fallback, measured in tests.
+* Stacked scan params carry a leading layer/group dim: specs get None
+  prepended automatically.
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def _axis_size(mesh, name) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 0
+
+
+def data_axes(mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _fit(spec: P, shape, mesh) -> P:
+    """Drop spec axes that don't divide the corresponding dim."""
+    out = []
+    for dim, ax in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if ax is None:
+            out.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        size = 1
+        for a in axes:
+            size *= max(_axis_size(mesh, a), 1)
+        ok = all(_axis_size(mesh, a) > 0 for a in axes) and dim % size == 0
+        out.append(ax if ok else None)
+    return P(*out)
+
+
+# (regex on path, tp spec, fsdp_tp spec) — first match wins.
+_RULES = [
+    # embeddings/lm_head: vocab on 'model' ONLY, even under FSDP — sharding
+    # the d_model dim on 'data' collides with batch-on-'data' activations and
+    # provokes (B,S,d) regather storms at the embed/logits boundaries
+    # (measured, SPerf iteration 4); the table is small next to layer params.
+    (r"embed.*table", P("model", None), P("model", None)),
+    (r"lm_head.*w$", P(None, "model"), P(None, "model")),
+    (r"vision_proj.*w$", P(None, "model"), P("data", "model")),
+    (r"(wq|wk|wv|w_gate|w_up|up_proj|in_proj|w_in|w_z|w_i|w_f|w_o)\]\['w",
+     P(None, "model"), P("data", "model")),
+    (r"(wo|w_down|down_proj|out_proj|w_out)\]\['w",
+     P("model", None), P("model", "data")),
+    (r"router", P(None, None), P(None, None)),
+    # MoE expert weights (E, d, ff) / (E, ff, d): expert-parallel on 'model'
+    (r"moe.*w_(gate|up)$", P("model", None, None), P("model", "data", None)),
+    (r"moe.*w_down$", P("model", None, None), P("model", None, "data")),
+    (r"shared.*w_(gate|up)$", P(None, "model"), P("data", "model")),
+    (r"shared.*w_down$", P("model", None), P("model", "data")),
+    (r"conv_w", P(None, "model"), P(None, "model")),
+    (r"R$", P(None, None, None, None), P(None, None, None, None)),
+    # mlp dicts inside GNN models: handled by generic w rules above
+]
+
+
+def _spec_for_path(path_str: str, shape, mesh, mode: str) -> P:
+    if mode == "dp":
+        return P()     # pure data parallelism: replicate all params
+    for pat, tp_spec, fsdp_spec in _RULES:
+        if re.search(pat, path_str):
+            # "tp_zero1" = TP params (no per-layer gathers); the ZeRO-1 part
+            # (data-sharded Adam state) is applied by optimizer_state_specs
+            spec = fsdp_spec if mode == "fsdp_tp" else tp_spec
+            return _fit(spec, shape, mesh)
+    if len(shape) >= 2:
+        # default for unmatched matrices: shard last dim on model
+        return _fit(P(*([None] * (len(shape) - 1) + ["model"])), shape, mesh)
+    return P()
+
+
+def param_specs(params, cfg, mesh, mode: str | None = None):
+    """PartitionSpec pytree matching ``params``."""
+    mode = mode or getattr(cfg, "param_sharding", "tp")
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for path, leaf in flat:
+        pstr = jax.tree_util.keystr(path)
+        stacked = "blocks" in pstr or "first_layers" in pstr
+        shape = leaf.shape
+        inner_shape = shape[1:] if stacked else shape
+        inner_size = 1
+        for d in inner_shape:
+            inner_size *= d
+        if inner_size < 2 ** 16:
+            # tiny tensors (gates, norms, biases): replicate — sharding them
+            # buys nothing and provokes GSPMD resharding pathologies
+            specs.append(P())
+        elif stacked:
+            inner = _spec_for_path(pstr, shape[1:], mesh, mode)
+            specs.append(P(None, *tuple(inner)))
+        else:
+            specs.append(_spec_for_path(pstr, shape, mesh, mode))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def param_shardings(params, cfg, mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        param_specs(params, cfg, mesh),
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def optimizer_state_specs(params_shape, pspecs, mesh):
+    """ZeRO-1: Adam m/v sharded over 'data' on top of the param specs (first
+    dim that is unsharded and divisible), params themselves left as given.
+    Removes per-layer FSDP param all-gathers while keeping optimizer memory
+    sharded (SPerf iteration 5)."""
+    dsize = _axis_size(mesh, "data")
+
+    def one(leaf, spec):
+        if dsize <= 1:
+            return spec
+        used = [a for ax in tuple(spec) if ax is not None
+                for a in (ax if isinstance(ax, tuple) else (ax,))]
+        if "data" in used:
+            return spec
+        dims = list(tuple(spec)) + [None] * (len(leaf.shape) - len(tuple(spec)))
+        for i, (d, ax) in enumerate(zip(leaf.shape, dims)):
+            if ax is None and d % dsize == 0 and d >= dsize:
+                dims[i] = "data"
+                return P(*dims)
+        return spec
+
+    return jax.tree_util.tree_map(one, params_shape, pspecs,
+                                  is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                mode: str | None = None) -> dict:
+    dp = data_axes(mesh)
+    mode = mode or getattr(cfg, "param_sharding", "tp")
+    if mode == "dp":
+        # pure data parallelism: the 'model' axis carries no params — use it
+        # for batch too, or it idles and duplicates work (SPerf iteration 8)
+        dp = dp + tuple(a for a in ("model",) if a in mesh.axis_names)
+    ndp = 1
+    for a in dp:
+        ndp *= _axis_size(mesh, a)
+    bspec = dp if (shape.global_batch % max(ndp, 1) == 0 and ndp > 1) else None
+    out = {"tokens": P(bspec, None), "labels": P(bspec, None)}
+    if cfg.frontend in ("vision", "audio"):
+        key = "prefix_embeds" if cfg.frontend == "vision" else "audio_embeds"
+        out[key] = P(bspec, None, None)
+    if shape.kind != "train":
+        out.pop("labels")
+    return out
+
+
+def cache_seq_axes(shape: ShapeConfig, mesh):
+    """How to shard the KV-cache sequence dim: 'model' normally; for batch-1
+    long-context decode, both ('data','model')."""
+    if shape.global_batch == 1:
+        return tuple(a for a in ("data", "model") if a in mesh.axis_names)
+    return ("model",) if "model" in mesh.axis_names else ()
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig, mesh, cache_tree):
+    """Specs for a decode cache/state pytree (shapes from eval_shape).
+
+    Heuristic by rank & shape: tensors with a dim == shape.seq_len get that
+    dim sharded per ``cache_seq_axes``; the batch dim (== global_batch) goes
+    on the data axes; SSM head dims go on 'model' when divisible."""
+    dp = data_axes(mesh)
+    ndp = 1
+    for a in dp:
+        ndp *= _axis_size(mesh, a)
+    seq_ax = cache_seq_axes(shape, mesh)
+    b = shape.global_batch
+
+    def spec_of(leaf):
+        dims = []
+        seq_done = False
+        batch_done = False
+        for d in leaf.shape:
+            if d == shape.seq_len and seq_ax and not seq_done:
+                dims.append(seq_ax if len(seq_ax) > 1 else seq_ax[0])
+                seq_done = True
+            elif (d == b and b % max(ndp, 1) == 0 and ndp > 1 and b > 1
+                  and not batch_done and not seq_done):
+                dims.append(dp if len(dp) > 1 else dp[0])
+                batch_done = True
+            else:
+                dims.append(None)
+        return _fit(P(*dims), leaf.shape, mesh)
+
+    return jax.tree_util.tree_map(spec_of, cache_tree)

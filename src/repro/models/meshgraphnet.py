@@ -1,0 +1,106 @@
+"""MeshGraphNet / X-MeshGraphNet model (paper SII + SIII-D).
+
+Encoder -> L message-passing processor layers (distinct params, residual edge
+and node updates, MLPs with trailing LayerNorm) -> decoder. All normalization
+is feature-local (LayerNorm) — batch statistics would break the partition
+equivalence (paper SIII-A) and are deliberately unsupported.
+
+The processor aggregation (scatter-add of messages) has two implementations:
+``agg_impl='xla'`` uses ``jax.ops.segment_sum``; ``agg_impl='pallas'`` uses the
+TPU kernel in ``repro.kernels.segment_agg`` (scatter-as-one-hot-MXU-matmul).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import GNNConfig
+from repro.models import nn
+
+
+def init(key, cfg: GNNConfig, dtype=jnp.float32):
+    k_ne, k_ee, k_pe, k_pn, k_d = jax.random.split(key, 5)
+    h = cfg.hidden
+    hidden_dims = [h] * cfg.mlp_layers
+
+    def edge_layer_init(k):
+        return nn.mlp_init(k, [3 * h] + hidden_dims + [h], dtype, final_layernorm=True)
+
+    def node_layer_init(k):
+        return nn.mlp_init(k, [2 * h] + hidden_dims + [h], dtype, final_layernorm=True)
+
+    return {
+        "node_encoder": nn.mlp_init(k_ne, [cfg.node_in] + hidden_dims + [h], dtype, final_layernorm=True),
+        "edge_encoder": nn.mlp_init(k_ee, [cfg.edge_in] + hidden_dims + [h], dtype, final_layernorm=True),
+        "proc_edge": nn.stacked_init(k_pe, cfg.n_mp_layers, edge_layer_init),
+        "proc_node": nn.stacked_init(k_pn, cfg.n_mp_layers, node_layer_init),
+        "decoder": nn.mlp_init(k_d, [h] + hidden_dims + [cfg.node_out], dtype),
+    }
+
+
+def _aggregate(messages, receivers, n_nodes: int, agg_impl: str):
+    if agg_impl == "pallas":
+        from repro.kernels.segment_agg import ops as segops
+        return segops.segment_sum(messages, receivers, n_nodes)
+    return jax.ops.segment_sum(messages, receivers, num_segments=n_nodes)
+
+
+def apply(params, cfg: GNNConfig, node_feats, edge_feats, senders, receivers,
+          edge_mask: Optional[jnp.ndarray] = None,
+          agg_impl: str = "xla"):
+    """Forward pass on one (sub)graph.
+
+    node_feats: (N, node_in); edge_feats: (E, edge_in);
+    senders/receivers: (E,) int32; edge_mask: (E,) 1.0 for real edges.
+    Returns (N, node_out).
+    """
+    n_nodes = node_feats.shape[0]
+    act = cfg.act
+    h = nn.mlp(params["node_encoder"], node_feats, act)
+    e = nn.mlp(params["edge_encoder"], edge_feats, act)
+    if edge_mask is not None:
+        e = e * edge_mask[:, None]
+
+    def mp_layer(carry, layer_params):
+        h, e = carry
+        pe, pn = layer_params
+        msg_in = jnp.concatenate([h[senders], h[receivers], e], axis=-1)
+        e_new = e + nn.mlp(pe, msg_in, act)
+        if edge_mask is not None:
+            e_new = e_new * edge_mask[:, None]
+        agg = _aggregate(e_new, receivers, n_nodes, agg_impl)
+        h_new = h + nn.mlp(pn, jnp.concatenate([h, agg], axis=-1), act)
+        return (h_new, e_new), None
+
+    if getattr(cfg, "remat", True):
+        # activation checkpointing (paper SV-D): save only the per-layer
+        # (h, e) carries; recompute MLP intermediates in the backward pass
+        mp_layer = jax.checkpoint(
+            mp_layer, policy=jax.checkpoint_policies.nothing_saveable)
+    (h, e), _ = jax.lax.scan(mp_layer, (h, e), (params["proc_edge"], params["proc_node"]))
+    return nn.mlp(params["decoder"], h, act)
+
+
+def masked_mse(pred, target, mask, denom=None):
+    """Sum of squared errors over masked nodes, divided by ``denom``.
+
+    With ``denom = total_owned_nodes * node_out`` summed across partitions,
+    partition losses add up exactly to the full-graph mean-squared error —
+    the normalization required for gradient-aggregation equivalence
+    (paper SIII-A: halo nodes are filtered out before the loss).
+    """
+    se = jnp.sum(jnp.square(pred - target) * mask[:, None])
+    if denom is None:
+        denom = jnp.maximum(jnp.sum(mask) * pred.shape[-1], 1.0)
+    return se / denom
+
+
+def loss_fn(params, cfg: GNNConfig, batch, denom=None, agg_impl: str = "xla"):
+    """batch keys: node_feats, edge_feats, senders, receivers, targets,
+    loss_mask (owned nodes), optional edge_mask."""
+    pred = apply(params, cfg, batch["node_feats"], batch["edge_feats"],
+                 batch["senders"], batch["receivers"],
+                 edge_mask=batch.get("edge_mask"), agg_impl=agg_impl)
+    return masked_mse(pred, batch["targets"], batch["loss_mask"], denom)

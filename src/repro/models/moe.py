@@ -1,0 +1,182 @@
+"""Mixture-of-Experts layer: capacity-based top-k routing, GSPMD-friendly.
+
+Formulation (per batch row, so dispatch never crosses the data axis):
+
+  router logits (B, S, E) -> top-k -> per-row, per-expert capacity C
+  dispatch: gather tokens into a (B, E, C, d) buffer (slot indices computed
+  with a sort by expert id — no one-hot einsum, whose (S, E, C) tensor would
+  be enormous at 32k tokens)
+  expert compute: batched gated-FFN einsum (B, E, C, d) x (E, d, ff)
+  combine: weighted scatter-add back to (B, S, d)
+
+Sharding: expert axis E -> mesh 'model' axis (expert parallelism); batch B ->
+('pod','data'). The dispatch gather/scatter are row-local, so the only
+collective GSPMD inserts is the output partial-sum over 'model' — the same
+all-reduce a dense TP FFN needs.
+
+Dropped tokens (over capacity) pass through via the residual connection,
+standard GShard/Switch behaviour; tests measure the drop rate.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.models import nn
+
+
+def init(key, d_model: int, cfg: MoEConfig, dtype=jnp.float32):
+    k_r, k_g, k_u, k_d, k_s = jax.random.split(key, 5)
+    e, ff = cfg.n_experts, cfg.d_ff_expert
+    lim = (1.0 / d_model) ** 0.5
+    lim_ff = (1.0 / ff) ** 0.5
+    u = jax.random.uniform
+    p = {
+        "router": {"w": u(k_r, (d_model, e), jnp.float32, -lim, lim).astype(dtype)},
+        "w_gate": u(k_g, (e, d_model, ff), jnp.float32, -lim, lim).astype(dtype),
+        "w_up": u(k_u, (e, d_model, ff), jnp.float32, -lim, lim).astype(dtype),
+        "w_down": u(k_d, (e, ff, d_model), jnp.float32, -lim_ff, lim_ff).astype(dtype),
+    }
+    if cfg.n_shared_experts:
+        ks = jax.random.split(k_s, 3)
+        sff = ff * cfg.n_shared_experts
+        p["shared"] = {
+            "w_gate": u(ks[0], (d_model, sff), jnp.float32, -lim, lim).astype(dtype),
+            "w_up": u(ks[1], (d_model, sff), jnp.float32, -lim, lim).astype(dtype),
+            "w_down": u(ks[2], (sff, d_model), jnp.float32, -(1.0 / sff) ** 0.5,
+                        (1.0 / sff) ** 0.5).astype(dtype),
+        }
+    return p
+
+
+def capacity(cfg: MoEConfig, seq_len: int) -> int:
+    c = int(seq_len * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    return max(c, 1)
+
+
+def route(params, x, cfg: MoEConfig):
+    """Router: probs over experts, top-k selection (softmax-then-topk).
+
+    Returns (weights (B,S,K) f32, expert_idx (B,S,K) i32, aux_loss scalar).
+    """
+    logits = (x.astype(jnp.float32) @ params["router"]["w"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                    # (B,S,E)
+    weights, expert_idx = jax.lax.top_k(probs, cfg.top_k)      # (B,S,K)
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balance aux loss: E * sum_e f_e * p_e
+    e = cfg.n_experts
+    f = jnp.mean(jax.nn.one_hot(expert_idx, e, dtype=jnp.float32), axis=(1, 2))  # (B,E) frac
+    pbar = jnp.mean(probs, axis=1)                             # (B,E)
+    aux = e * jnp.mean(jnp.sum(f * pbar, axis=-1))
+    return weights, expert_idx, aux
+
+
+def _dispatch_indices(expert_idx, n_experts: int, cap: int, weights=None):
+    """Per row: for each (expert, slot) the source token index, plus per-token
+    slot position (for combine) — computed with one sort, no (S,E,C) one-hot.
+
+    expert_idx: (S, K) int32; weights: (S, K) f32 or None. Returns:
+      src      (E, C) int32   token index feeding each slot (0 if empty)
+      src_ok   (E, C) f32     slot validity
+      pos      (S, K) int32   slot position of each assignment (>=C = dropped)
+      w_slot   (E, C) f32     combine weight of each slot (0 if empty/None)
+    """
+    s, k = expert_idx.shape
+    flat_e = expert_idx.reshape(-1)                            # (S*K,)
+    flat_tok = jnp.repeat(jnp.arange(s, dtype=jnp.int32), k)   # (S*K,)
+    order = jnp.argsort(flat_e, stable=True)                   # group by expert
+    sorted_e = flat_e[order]
+    # position within expert group = rank - first rank of that expert
+    ranks = jnp.arange(s * k, dtype=jnp.int32)
+    first = jnp.searchsorted(sorted_e, jnp.arange(n_experts, dtype=jnp.int32),
+                             side="left").astype(jnp.int32)
+    pos_sorted = ranks - first[sorted_e]                       # (S*K,)
+    # scatter back to assignment order
+    pos = jnp.zeros((s * k,), jnp.int32).at[order].set(pos_sorted)
+    # build slot -> token map; dropped assignments scatter out-of-bounds and
+    # are discarded (mode='drop') instead of clobbering slot cap-1
+    valid = pos < cap
+    slot_of_assign = jnp.where(valid, flat_e * cap + pos,
+                               n_experts * cap)     # OOB when dropped
+    src = jnp.zeros((n_experts * cap,), jnp.int32)
+    src = src.at[slot_of_assign].set(flat_tok, mode="drop")
+    src_ok = jnp.zeros((n_experts * cap,), jnp.float32)
+    src_ok = src_ok.at[slot_of_assign].set(1.0, mode="drop")
+    w_slot = jnp.zeros((n_experts * cap,), jnp.float32)
+    if weights is not None:
+        w_slot = w_slot.at[slot_of_assign].set(
+            weights.reshape(-1).astype(jnp.float32), mode="drop")
+    return (src.reshape(n_experts, cap), src_ok.reshape(n_experts, cap),
+            pos.reshape(s, k), w_slot.reshape(n_experts, cap))
+
+
+def apply(params, x, cfg: MoEConfig, act: str = "silu"):
+    """x: (B, S, d). Returns (y (B, S, d), aux_loss).
+
+    The combine is a SCATTER into token space (slot outputs weighted and
+    segment-summed by their source token), NOT a gather from slot space:
+    with the expert axis sharded ('model'), a gather would force GSPMD to
+    all-gather the entire (B,E,C,d) dispatch buffer (measured: 172 GB/layer
+    at qwen3 train_4k scale); the scatter keeps expert shards local and
+    reduces with a single (B,S,d) all-reduce — the same collective a dense
+    TP FFN needs. See EXPERIMENTS.md SPerf iteration 1.
+    """
+    b, s, d = x.shape
+    cap = capacity(cfg, s)
+    weights, expert_idx, aux = route(params, x, cfg)
+    src, src_ok, pos, w_slot = jax.vmap(
+        lambda ei, w: _dispatch_indices(ei, cfg.n_experts, cap, w)
+    )(expert_idx, weights)
+    # gather tokens into expert buffers: (B, E, C, d) — local (x replicated
+    # across 'model'); hint the buffer sharding so GSPMD keeps E sharded
+    xb = jnp.take_along_axis(
+        x[:, None, :, :],                                      # (B,1,S,d)
+        src[..., None].astype(jnp.int32),                      # (B,E,C,1)
+        axis=2)
+    xb = xb * src_ok[..., None].astype(x.dtype)
+    xb = nn.shard_hint(xb, ("dp", "model", None, None))
+    # batched gated FFN over experts
+    a = nn.ACTS[act]
+    g = jnp.einsum("becd,edf->becf", xb, params["w_gate"])
+    u = jnp.einsum("becd,edf->becf", xb, params["w_up"])
+    yb = jnp.einsum("becf,efd->becd", a(g) * u, params["w_down"])  # (B,E,C,d)
+    yb = nn.shard_hint(yb, ("dp", "model", None, None))
+    # combine: weight each slot and scatter-add back to its source token
+    yw = yb * w_slot[..., None].astype(yb.dtype)               # (B,E,C,d)
+    yw = yw.reshape(b, cfg.n_experts * cap, d)
+    segs = src.reshape(b, cfg.n_experts * cap)
+    y = jax.vmap(lambda v, i: jax.ops.segment_sum(v, i, num_segments=s)
+                 )(yw, segs)                                   # (B,S,d)
+    y = nn.shard_hint(y, ("dp", None, None))
+    if "shared" in params:
+        sp = params["shared"]
+        y = y + (a(x @ sp["w_gate"]) * (x @ sp["w_up"])) @ sp["w_down"]
+    return y.astype(x.dtype), aux
+
+
+def apply_dense_reference(params, x, cfg: MoEConfig, act: str = "silu"):
+    """Oracle: compute every expert on every token, combine by router weights.
+    No capacity (nothing dropped) — used by tests with capacity_factor large
+    enough that `apply` drops nothing."""
+    a = nn.ACTS[act]
+    weights, expert_idx, aux = route(params, x, cfg)
+    g = jnp.einsum("bsd,edf->bsef", x, params["w_gate"])
+    u = jnp.einsum("bsd,edf->bsef", x, params["w_up"])
+    y_all = jnp.einsum("bsef,efd->bsed", a(g) * u, params["w_down"])
+    onehot = jax.nn.one_hot(expert_idx, cfg.n_experts, dtype=x.dtype)  # (B,S,K,E)
+    w = jnp.einsum("bske,bsk->bse", onehot, weights.astype(x.dtype))
+    y = jnp.einsum("bsed,bse->bsd", y_all, w)
+    if "shared" in params:
+        sp = params["shared"]
+        y = y + (a(x @ sp["w_gate"]) * (x @ sp["w_up"])) @ sp["w_down"]
+    return y.astype(x.dtype), aux
+
+
+def drop_rate(expert_idx, cfg: MoEConfig) -> jnp.ndarray:
+    """Fraction of assignments dropped at the configured capacity."""
+    b, s, k = expert_idx.shape
+    cap = capacity(cfg, s)
+    _, _, pos, _ = jax.vmap(
+        lambda ei: _dispatch_indices(ei, cfg.n_experts, cap))(expert_idx)
+    return jnp.mean((pos >= cap).astype(jnp.float32))

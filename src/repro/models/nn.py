@@ -1,0 +1,159 @@
+"""Pure-JAX neural-network substrate: params are nested dicts of arrays.
+
+Conventions
+-----------
+* ``*_init(key, ...) -> params`` builds a param pytree.
+* The matching apply function takes ``(params, x, ...)``.
+* All layers are *local* (no batch statistics) — a hard requirement of the
+  paper's halo-partitioning scheme (SIII-A: batch norm is unsupported).
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def _uniform_limit(key, shape, limit, dtype):
+    return jax.random.uniform(key, shape, dtype=jnp.float32, minval=-limit, maxval=limit).astype(dtype)
+
+
+def dense_init(key, in_dim: int, out_dim: int, dtype=jnp.float32, use_bias: bool = True):
+    """LeCun-uniform linear layer."""
+    kw, kb = jax.random.split(key)
+    limit = math.sqrt(1.0 / in_dim)
+    p = {"w": _uniform_limit(kw, (in_dim, out_dim), limit, dtype)}
+    if use_bias:
+        p["b"] = jnp.zeros((out_dim,), dtype)
+    return p
+
+
+def dense(params, x):
+    y = x @ params["w"]
+    if "b" in params:
+        y = y + params["b"]
+    return y
+
+
+ACTS: dict[str, Callable] = {
+    "silu": jax.nn.silu,
+    "gelu": jax.nn.gelu,
+    "relu": jax.nn.relu,
+    "tanh": jnp.tanh,
+}
+
+
+def mlp_init(key, dims: Sequence[int], dtype=jnp.float32, final_layernorm: bool = False):
+    """MLP with ``len(dims)-1`` linear layers; optional trailing LayerNorm
+    (MeshGraphNet uses LayerNorm after each edge/node MLP)."""
+    keys = jax.random.split(key, len(dims) - 1)
+    p = {"layers": [dense_init(k, dims[i], dims[i + 1], dtype) for i, k in enumerate(keys)]}
+    if final_layernorm:
+        p["ln"] = layernorm_init(dims[-1], dtype)
+    return p
+
+
+def mlp(params, x, act: str = "silu"):
+    a = ACTS[act]
+    n = len(params["layers"])
+    for i, lp in enumerate(params["layers"]):
+        x = dense(lp, x)
+        if i < n - 1:
+            x = a(x)
+    if "ln" in params:
+        x = layernorm(params["ln"], x)
+    return x
+
+
+def layernorm_init(dim: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def layernorm(params, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+def rmsnorm_init(dim: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(jnp.square(xf), axis=-1, keepdims=True) + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def norm_init(kind: str, dim: int, dtype=jnp.float32):
+    return layernorm_init(dim, dtype) if kind == "layernorm" else rmsnorm_init(dim, dtype)
+
+
+def norm_apply(kind: str, params, x):
+    return layernorm(params, x) if kind == "layernorm" else rmsnorm(params, x)
+
+
+def embed_init(key, vocab: int, dim: int, dtype=jnp.float32):
+    return {"table": (jax.random.normal(key, (vocab, dim), jnp.float32) * (1.0 / math.sqrt(dim))).astype(dtype)}
+
+
+def embed(params, ids):
+    return jnp.take(params["table"], ids, axis=0)
+
+
+def stacked_init(key, n: int, init_fn: Callable):
+    """Initialize ``n`` copies of a layer with independent keys, stacked on a
+    leading axis — the layout consumed by ``jax.lax.scan`` over layers."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+def param_count(params) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(params))
+
+
+def param_bytes(params) -> int:
+    return sum(int(x.size) * x.dtype.itemsize for x in jax.tree_util.tree_leaves(params))
+
+
+def shard_hint(x, dims):
+    """Best-effort ``with_sharding_constraint``: ``dims`` is a tuple over x's
+    axes of 'dp' (pod+data), 'model', or None. Resolves against the active
+    abstract mesh; silently a no-op without a mesh or when sizes don't divide
+    (so model code works identically on 1-device CPU tests)."""
+    import jax as _jax
+    from jax.sharding import PartitionSpec as _P
+    try:
+        m = _jax.sharding.get_abstract_mesh()
+        if m is None or not m.axis_names:
+            return x
+        sizes = dict(m.shape)
+        dp = tuple(a for a in ("pod", "data") if a in m.axis_names)
+        spec = []
+        for dim, want in zip(x.shape, dims):
+            if want == "dp" and dp:
+                n = 1
+                for a in dp:
+                    n *= sizes.get(a, 1)
+                spec.append((dp if len(dp) > 1 else dp[0])
+                            if n > 1 and dim % n == 0 else None)
+            elif want == "model" and "model" in m.axis_names:
+                n = sizes.get("model", 1)
+                spec.append("model" if n > 1 and dim % n == 0 else None)
+            else:
+                spec.append(None)
+        return _jax.lax.with_sharding_constraint(x, _P(*spec))
+    except Exception:
+        return x
+
+
+def cast_floats(tree, dtype):
+    def _c(x):
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+    return jax.tree_util.tree_map(_c, tree)

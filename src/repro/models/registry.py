@@ -1,0 +1,166 @@
+"""Uniform model API over all architecture families.
+
+``get_model(cfg)`` returns a :class:`ModelAPI` with:
+  init(key) -> params
+  train_loss(params, batch) -> scalar
+  prefill(params, batch) -> (logits, cache)        (cache=None families return state)
+  decode(params, cache, batch, pos) -> (logits, cache)
+  empty_cache(batch, seq_len) -> pytree            (KV cache or recurrent state)
+
+Batch key conventions (all jnp arrays):
+  tokens (B,S) i32, labels (B,S) i32
+  prefix_embeds (B,P,d)      vlm only
+  audio_embeds (B,T_a,d)     audio only
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import stacks, transformer as tfm, whisper as whi
+from repro.models import nn
+
+
+@dataclass(frozen=True)
+class ModelAPI:
+    cfg: ModelConfig
+    init: Callable
+    train_loss: Callable
+    prefill: Callable
+    decode: Callable
+    empty_cache: Callable
+
+
+def _decoder_api(cfg: ModelConfig) -> ModelAPI:
+    def init(key):
+        return tfm.init(key, cfg)
+
+    def train_loss(params, batch):
+        return tfm.train_loss(params, cfg, batch)
+
+    def prefill(params, batch):
+        logits, cache, _ = tfm.forward(
+            params, cfg, batch["tokens"],
+            prefix_embeds=batch.get("prefix_embeds"), mode="prefill")
+        return logits, cache
+
+    def decode(params, cache, batch, pos):
+        logits, cache, _ = tfm.forward(params, cfg, batch["tokens"],
+                                       mode="decode", cache=cache,
+                                       decode_pos=pos)
+        return logits, cache
+
+    def empty_cache(batch: int, seq_len: int):
+        return tfm.empty_cache(cfg, batch, seq_len)
+
+    return ModelAPI(cfg, init, train_loss, prefill, decode, empty_cache)
+
+
+def _whisper_api(cfg: ModelConfig) -> ModelAPI:
+    def init(key):
+        return whi.init(key, cfg)
+
+    def train_loss(params, batch):
+        return whi.train_loss(params, cfg, batch)
+
+    def prefill(params, batch):
+        enc_out = whi.encode(params, cfg, batch["audio_embeds"])
+        logits, cache = whi.decode_stack(params, cfg, batch["tokens"], None,
+                                         mode="prefill", enc_out=enc_out)
+        return logits, cache
+
+    def decode(params, cache, batch, pos):
+        logits, cache = whi.decode_stack(params, cfg, batch["tokens"], cache,
+                                         mode="decode", decode_pos=pos)
+        return logits, cache
+
+    def empty_cache(batch: int, seq_len: int):
+        return whi.empty_cache(cfg, batch, seq_len,
+                               t_audio=cfg.n_frontend_tokens)
+
+    return ModelAPI(cfg, init, train_loss, prefill, decode, empty_cache)
+
+
+def _xlstm_api(cfg: ModelConfig) -> ModelAPI:
+    dtype = jnp.dtype(cfg.dtype)
+
+    def init(key):
+        return stacks.xlstm_init(key, cfg, dtype)
+
+    def train_loss(params, batch):
+        logits, _ = stacks.xlstm_forward(params, cfg, batch["tokens"])
+        return tfm.cross_entropy(logits, batch["labels"], cfg.vocab_size)
+
+    def prefill(params, batch):
+        return stacks.xlstm_forward(params, cfg, batch["tokens"])
+
+    def decode(params, state, batch, pos):
+        del pos  # recurrent state is position-free
+        return stacks.xlstm_forward(params, cfg, batch["tokens"], state)
+
+    def empty_cache(batch: int, seq_len: int):
+        del seq_len  # O(1) state — the whole point of the architecture
+        return stacks.xlstm_empty_state(cfg, batch)
+
+    return ModelAPI(cfg, init, train_loss, prefill, decode, empty_cache)
+
+
+def _hybrid_api(cfg: ModelConfig) -> ModelAPI:
+    dtype = jnp.dtype(cfg.dtype)
+
+    def init(key):
+        return stacks.hybrid_init(key, cfg, dtype)
+
+    def train_loss(params, batch):
+        logits, _ = stacks.hybrid_forward(params, cfg, batch["tokens"],
+                                          mode="train")
+        return tfm.cross_entropy(logits, batch["labels"], cfg.vocab_size)
+
+    def prefill(params, batch):
+        s = batch["tokens"].shape[1]
+        state = stacks.hybrid_empty_state(cfg, batch["tokens"].shape[0], s)
+        return stacks.hybrid_forward(params, cfg, batch["tokens"], state,
+                                     mode="prefill")
+
+    def decode(params, state, batch, pos):
+        return stacks.hybrid_forward(params, cfg, batch["tokens"], state,
+                                     mode="decode", decode_pos=pos)
+
+    def empty_cache(batch: int, seq_len: int):
+        return stacks.hybrid_empty_state(cfg, batch, seq_len)
+
+    return ModelAPI(cfg, init, train_loss, prefill, decode, empty_cache)
+
+
+def get_model(cfg: ModelConfig) -> ModelAPI:
+    if cfg.is_encoder_decoder:
+        return _whisper_api(cfg)
+    if cfg.ssm is not None and cfg.attn_every:
+        return _hybrid_api(cfg)
+    if cfg.ssm is not None:
+        return _xlstm_api(cfg)
+    return _decoder_api(cfg)
+
+
+def param_count(cfg: ModelConfig) -> int:
+    """Parameter count without materializing arrays (eval_shape)."""
+    api = get_model(cfg)
+    shapes = jax.eval_shape(lambda k: api.init(k), jax.random.PRNGKey(0))
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(shapes))
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Active params per token (MoE: only top_k + shared experts count)."""
+    total = param_count(cfg)
+    if cfg.moe is None:
+        return total
+    m = cfg.moe
+    gs, ng, _ = tfm.group_structure(cfg)
+    per_expert = 3 * cfg.d_model * m.d_ff_expert
+    n_scanned = ng * gs
+    inactive = n_scanned * (m.n_experts - m.top_k) * per_expert
+    return total - inactive

@@ -1,0 +1,424 @@
+"""State-space & recurrent blocks: Mamba2 (SSD), xLSTM (mLSTM + sLSTM), and
+the zamba2-style hybrid stack (Mamba2 + shared attention block).
+
+The workhorse is a single *chunked gated linear attention* (GLA) core:
+
+    S_t = a_t * S_{t-1} + b_t * k_t v_t^T         (per head; a_t,b_t scalars)
+    y_t = q_t^T S_t
+
+Mamba2's SSD (scalar-per-head A) and the mLSTM matrix memory are both
+instances of this recurrence; they differ only in how (q, k, v, a, b) are
+produced and in mLSTM's max-stabilized exponential gating, which we fold in by
+transforming to an equivalent system with decays exp(la_t + m_{t-1} - m_t) and
+input scales exp(lb_t - m_t) (the standard stabilization).
+
+Chunked evaluation (chunk C): intra-chunk term is a masked (Q K^T) V matmul —
+MXU-friendly — and the inter-chunk term is a short scan carrying S. This is
+the TPU-native *exact* evaluation of the recurrence; the "halo" of a chunk is
+exactly the carried state, the SSM analogue of the paper's halo exchange
+(DESIGN.md §5). Correctness vs. the naive per-step scan is property-tested.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import nn
+from repro.models import transformer as tfm
+
+# ---------------------------------------------------------------------------
+# GLA core
+# ---------------------------------------------------------------------------
+
+def gla_scan_reference(q, k, v, log_a, log_b, S0, n0=None):
+    """Naive per-step recurrence (oracle for tests). Shapes:
+    q,k: (B,T,H,dk); v: (B,T,H,dv); log_a,log_b: (B,T,H);
+    S0: (B,H,dk,dv); n0: (B,H,dk) or None.
+    Returns y (B,T,H,dv), ny (B,T,H) or None, S_T, n_T."""
+    track_n = n0 is not None
+
+    def step(carry, xs):
+        S, n = carry
+        qt, kt, vt, lat, lbt = xs
+        a = jnp.exp(lat)[..., None, None]
+        b = jnp.exp(lbt)[..., None, None]
+        S = a * S + b * (kt[..., :, None] * vt[..., None, :])
+        y = jnp.einsum("bhd,bhdv->bhv", qt, S)
+        if track_n:
+            n = a[..., 0] * n + b[..., 0] * kt
+            ny = jnp.einsum("bhd,bhd->bh", qt, n)
+        else:
+            ny = jnp.zeros(qt.shape[:-1])
+        return (S, n), (y, ny)
+
+    xs = tuple(jnp.moveaxis(x, 1, 0) for x in (q, k, v, log_a, log_b))
+    n0_ = n0 if track_n else jnp.zeros(S0.shape[:-1])
+    (S, n), (y, ny) = jax.lax.scan(step, (S0, n0_), xs)
+    y = jnp.moveaxis(y, 0, 1)
+    ny = jnp.moveaxis(ny, 0, 1) if track_n else None
+    return y, ny, S, (n if track_n else None)
+
+
+def gla_chunked(q, k, v, log_a, log_b, S0, n0=None, chunk: int = 64):
+    """Exact chunked evaluation of the GLA recurrence (see module docstring).
+
+    T must be divisible by ``chunk``. All math in float32."""
+    B, T, H, dk = q.shape
+    dv = v.shape[-1]
+    assert T % chunk == 0, (T, chunk)
+    nc = T // chunk
+    f32 = jnp.float32
+    q, k, v = (x.astype(f32) for x in (q, k, v))
+    log_a, log_b = (x.astype(f32) for x in (log_a, log_b))
+    track_n = n0 is not None
+
+    def resh(x):
+        return x.reshape(B, nc, chunk, *x.shape[2:]).swapaxes(0, 1)
+
+    qs, ks, vs, las, lbs = map(resh, (q, k, v, log_a, log_b))  # (nc,B,C,H,...)
+    cum = jnp.cumsum(las, axis=2)                              # inclusive cumsum
+    tot = cum[:, :, -1]                                        # (nc,B,H)
+
+    def body(carry, xs):
+        S, n = carry
+        q_c, k_c, v_c, cum_c, tot_c, lb_c = xs                 # (B,C,H,·)
+        e = jnp.exp(cum_c)                                     # (B,C,H)
+        r = jnp.exp(tot_c[:, None] - cum_c + lb_c)             # decay to end * b
+        w_in = jnp.exp(lb_c)
+        # inter-chunk
+        y = jnp.einsum("bchd,bhdv->bchv", q_c * e[..., None], S)
+        # intra-chunk
+        scores = jnp.einsum("bthd,bshd->bhts", q_c, k_c)
+        dmat = cum_c.transpose(0, 2, 1)[:, :, :, None] - \
+            cum_c.transpose(0, 2, 1)[:, :, None, :] + \
+            lb_c.transpose(0, 2, 1)[:, :, None, :]             # (B,H,C,C)
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+        wmat = jnp.where(mask, jnp.exp(dmat), 0.0)
+        sw = scores * wmat
+        y = y + jnp.einsum("bhts,bshv->bthv", sw, v_c)
+        ny = None
+        if track_n:
+            ny = jnp.einsum("bchd,bhd->bch", q_c * e[..., None], n) \
+                + jnp.sum(sw, axis=3).transpose(0, 2, 1)       # (B,C,H)
+        # state update
+        S = jnp.exp(tot_c)[..., None, None] * S + \
+            jnp.einsum("bshd,bshv->bhdv", k_c * r[..., None], v_c)
+        if track_n:
+            n = jnp.exp(tot_c)[..., None] * n + \
+                jnp.sum(k_c * r[..., None], axis=1)
+        return (S, n), (y, ny if track_n else jnp.zeros(y.shape[:-1]))
+
+    n0_ = n0.astype(f32) if track_n else jnp.zeros((B, H, dk), f32)
+    from repro.models.transformer import probe_unroll
+    (S, n), (ys, nys) = jax.lax.scan(
+        body, (S0.astype(f32), n0_), (qs, ks, vs, cum, tot, lbs),
+        unroll=True if probe_unroll() else 1)
+    y = ys.swapaxes(0, 1).reshape(B, T, H, dv)
+    ny = nys.swapaxes(0, 1).reshape(B, T, H) if track_n else None
+    return y, ny, S, (n if track_n else None)
+
+
+def gla_decode_step(q, k, v, log_a, log_b, S, n=None):
+    """One-token update. q,k: (B,H,dk); v: (B,H,dv); log_a/b: (B,H)."""
+    a = jnp.exp(log_a.astype(jnp.float32))[..., None, None]
+    b = jnp.exp(log_b.astype(jnp.float32))[..., None, None]
+    S = a * S + b * (k.astype(jnp.float32)[..., :, None]
+                     * v.astype(jnp.float32)[..., None, :])
+    y = jnp.einsum("bhd,bhdv->bhv", q.astype(jnp.float32), S)
+    ny = None
+    if n is not None:
+        n = a[..., 0] * n + b[..., 0] * k.astype(jnp.float32)
+        ny = jnp.einsum("bhd,bhd->bh", q.astype(jnp.float32), n)
+    return y, ny, S, n
+
+
+def stabilizer_scan(log_f, log_i, m0):
+    """m_t = max(m_{t-1} + log_f_t, log_i_t) via associative max-plus scan.
+    log_f, log_i: (B,T,H); m0: (B,H). Returns m (B,T,H) and m_prev (B,T,H)."""
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 + a2, jnp.maximum(b1 + a2, b2)
+
+    elems = (log_f, log_i)
+    asum, m_no_init = jax.lax.associative_scan(combine, elems, axis=1)
+    # fold in initial m0: m_t = max(m_no_init_t, m0 + cumsum(log_f)_t)
+    m = jnp.maximum(m_no_init, m0[:, None] + asum)
+    m_prev = jnp.concatenate([m0[:, None], m[:, :-1]], axis=1)
+    return m, m_prev
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block (SSD)
+# ---------------------------------------------------------------------------
+
+def mamba2_dims(cfg: ModelConfig):
+    ssm = cfg.ssm
+    d_inner = ssm.expand * cfg.d_model
+    n_heads = ssm.n_ssm_heads
+    hd = d_inner // n_heads
+    conv_dim = d_inner + 2 * ssm.d_state   # conv over [x, B, C] (ngroups=1)
+    return d_inner, n_heads, hd, conv_dim
+
+
+def mamba2_init(key, cfg: ModelConfig, dtype):
+    ssm = cfg.ssm
+    d = cfg.d_model
+    d_inner, n_heads, hd, conv_dim = mamba2_dims(cfg)
+    ks = jax.random.split(key, 4)
+    in_dim = 2 * d_inner + 2 * ssm.d_state + n_heads     # z, x, B, C, dt
+    return {
+        "norm": nn.rmsnorm_init(d, dtype),
+        "in_proj": nn.dense_init(ks[0], d, in_dim, dtype, use_bias=False),
+        "conv_w": (jax.random.normal(ks[1], (ssm.d_conv, conv_dim), jnp.float32)
+                   * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.zeros((n_heads,), jnp.float32),      # A = -exp(A_log) = -1
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "out_norm": nn.rmsnorm_init(d_inner, dtype),
+        "out_proj": nn.dense_init(ks[2], d_inner, d, dtype, use_bias=False),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv. x: (B,T,C); w: (K,C); state: (B,K-1,C) or None.
+    Returns (y (B,T,C), new_state (B,K-1,C))."""
+    kw = w.shape[0]
+    pad = state if state is not None else jnp.zeros(
+        (x.shape[0], kw - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(kw)) + b
+    new_state = xp[:, -(kw - 1):] if kw > 1 else jnp.zeros(
+        (x.shape[0], 0, x.shape[2]), x.dtype)
+    return y, new_state
+
+
+def _mamba2_qkvab(p, cfg: ModelConfig, u, conv_state=None):
+    """Shared train/decode projection path. u: (B,T,d)."""
+    ssm = cfg.ssm
+    d_inner, n_heads, hd, conv_dim = mamba2_dims(cfg)
+    zxbcdt = nn.dense(p["in_proj"], u)
+    z, xbc, dt_raw = jnp.split(zxbcdt, [d_inner, d_inner + conv_dim], axis=-1)
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xbc = jax.nn.silu(xbc)
+    x, Bmat, Cmat = jnp.split(xbc, [d_inner, d_inner + ssm.d_state], axis=-1)
+    B, T, _ = u.shape
+    v = x.reshape(B, T, n_heads, hd)
+    k = jnp.repeat(Bmat[:, :, None, :], n_heads, axis=2)      # shared B (g=1)
+    q = jnp.repeat(Cmat[:, :, None, :], n_heads, axis=2)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,T,H)
+    log_a = -dt * jnp.exp(p["A_log"])                          # <= 0
+    log_b = jnp.log(dt + 1e-20)
+    return z, v, k, q, log_a, log_b, x, new_conv
+
+
+def mamba2_apply(p, cfg: ModelConfig, u, state=None):
+    """u: (B,T,d). state: None (train) or dict(conv, S) for decode carry-in.
+    Returns (out (B,T,d), new_state)."""
+    ssm = cfg.ssm
+    d_inner, n_heads, hd, conv_dim = mamba2_dims(cfg)
+    B, T, _ = u.shape
+    un = nn.rmsnorm(p["norm"], u)
+    conv_state = None if state is None else state["conv"]
+    z, v, k, q, log_a, log_b, x, new_conv = _mamba2_qkvab(p, cfg, un, conv_state)
+    S0 = (jnp.zeros((B, n_heads, ssm.d_state, hd), jnp.float32)
+          if state is None else state["S"])
+    if T == 1 and state is not None:
+        y, _, S, _ = gla_decode_step(q[:, 0], k[:, 0], v[:, 0],
+                                     log_a[:, 0], log_b[:, 0], S0)
+        y = y[:, None]
+    else:
+        chunk = min(ssm.chunk_size, T)
+        if T % chunk:
+            chunk = math.gcd(T, chunk) or 1
+        y, _, S, _ = gla_chunked(q, k, v, log_a, log_b, S0, chunk=chunk)
+    y = y.reshape(B, T, d_inner) + p["D"].repeat(hd) * x.astype(jnp.float32)
+    y = nn.rmsnorm(p["out_norm"], y.astype(u.dtype)) * jax.nn.silu(z)
+    out = nn.dense(p["out_proj"], y)
+    return u + out, {"conv": new_conv, "S": S}
+
+
+def mamba2_empty_state(cfg: ModelConfig, batch: int):
+    ssm = cfg.ssm
+    d_inner, n_heads, hd, conv_dim = mamba2_dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, ssm.d_conv - 1, conv_dim), jnp.dtype(cfg.dtype)),
+        "S": jnp.zeros((batch, n_heads, ssm.d_state, hd), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block (xLSTM)
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    d_inner = cfg.ssm.expand * d
+    H = cfg.ssm.n_ssm_heads
+    hd = d_inner // H
+    ks = jax.random.split(key, 8)
+    return {
+        "norm": nn.rmsnorm_init(d, dtype),
+        "up_proj": nn.dense_init(ks[0], d, 2 * d_inner, dtype, use_bias=False),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm.d_conv, d_inner),
+                                     jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "wq": nn.dense_init(ks[2], d_inner, d_inner, dtype, use_bias=False),
+        "wk": nn.dense_init(ks[3], d_inner, d_inner, dtype, use_bias=False),
+        "wv": nn.dense_init(ks[4], d_inner, d_inner, dtype, use_bias=False),
+        "w_igate": nn.dense_init(ks[5], d_inner, H, dtype),
+        "w_fgate": nn.dense_init(ks[6], d_inner, H, dtype),
+        "out_norm": nn.rmsnorm_init(d_inner, dtype),
+        "down_proj": nn.dense_init(ks[7], d_inner, d, dtype, use_bias=False),
+    }
+
+
+def _mlstm_qkv_gates(p, cfg, xn, conv_state):
+    d_inner = cfg.ssm.expand * cfg.d_model
+    H = cfg.ssm.n_ssm_heads
+    hd = d_inner // H
+    B, T, _ = xn.shape
+    up = nn.dense(p["up_proj"], xn)
+    x_in, z = jnp.split(up, 2, axis=-1)
+    xc, new_conv = _causal_conv(x_in, p["conv_w"], p["conv_b"], conv_state)
+    xc = jax.nn.silu(xc)
+    q = nn.dense(p["wq"], xc).reshape(B, T, H, hd) / math.sqrt(hd)
+    k = nn.dense(p["wk"], xc).reshape(B, T, H, hd) / math.sqrt(hd)
+    v = nn.dense(p["wv"], x_in).reshape(B, T, H, hd)
+    log_f = jax.nn.log_sigmoid(nn.dense(p["w_fgate"], x_in).astype(jnp.float32))
+    log_i = nn.dense(p["w_igate"], x_in).astype(jnp.float32)   # i = exp(raw)
+    return q, k, v, log_f, log_i, z, new_conv
+
+
+def mlstm_apply(p, cfg: ModelConfig, x, state=None):
+    """Stabilized mLSTM. x: (B,T,d); state dict(conv, S, n, m) for decode."""
+    d_inner = cfg.ssm.expand * cfg.d_model
+    H = cfg.ssm.n_ssm_heads
+    hd = d_inner // H
+    B, T, _ = x.shape
+    xn = nn.rmsnorm(p["norm"], x)
+    conv_state = None if state is None else state["conv"]
+    q, k, v, log_f, log_i, z, new_conv = _mlstm_qkv_gates(p, cfg, xn, conv_state)
+
+    if state is None:
+        S0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+        n0 = jnp.zeros((B, H, hd), jnp.float32)
+        m0 = jnp.zeros((B, H), jnp.float32)   # NOT -inf: a -1e30 sentinel
+        # would be absorbed in the chunked cumsum (f32), zeroing intra decays
+    else:
+        S0, n0, m0 = state["S"], state["n"], state["m"]
+
+    m, m_prev = stabilizer_scan(log_f, log_i, m0)              # (B,T,H)
+    la_eff = log_f + m_prev - m
+    lb_eff = log_i - m
+    if T == 1 and state is not None:
+        y, ny, S, n = gla_decode_step(q[:, 0], k[:, 0], v[:, 0],
+                                      la_eff[:, 0], lb_eff[:, 0], S0, n0)
+        y, ny = y[:, None], ny[:, None]
+    else:
+        chunk = min(cfg.ssm.chunk_size, T)
+        if T % chunk:
+            chunk = math.gcd(T, chunk) or 1
+        y, ny, S, n = gla_chunked(q, k, v, la_eff, lb_eff, S0, n0, chunk=chunk)
+    denom = jnp.maximum(jnp.abs(ny), jnp.exp(-m))[..., None]
+    h = (y / jnp.maximum(denom, 1e-20)).reshape(B, T, d_inner)
+    h = nn.rmsnorm(p["out_norm"], h.astype(x.dtype)) * jax.nn.silu(z)
+    out = nn.dense(p["down_proj"], h)
+    new_state = {"conv": new_conv, "S": S, "n": n, "m": m[:, -1]}
+    return x + out, new_state
+
+
+def mlstm_empty_state(cfg: ModelConfig, batch: int):
+    d_inner = cfg.ssm.expand * cfg.d_model
+    H = cfg.ssm.n_ssm_heads
+    hd = d_inner // H
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm.d_conv - 1, d_inner), jnp.dtype(cfg.dtype)),
+        "S": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, H, hd), jnp.float32),
+        "m": jnp.zeros((batch, H), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block (xLSTM) — inherently sequential scalar recurrence
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    H = cfg.ssm.n_ssm_heads
+    hd = d // H
+    ks = jax.random.split(key, 7)
+    gate = lambda kk: nn.dense_init(kk, d, d, dtype)
+    lim = (1.0 / hd) ** 0.5
+    R = (jax.random.uniform(ks[4], (4, H, hd, hd), jnp.float32, -lim, lim)
+         ).astype(dtype)
+    return {
+        "norm": nn.rmsnorm_init(d, dtype),
+        "w_z": gate(ks[0]), "w_i": gate(ks[1]),
+        "w_f": gate(ks[2]), "w_o": gate(ks[3]),
+        "R": R,                                        # recurrent, per head
+        "out_norm": nn.rmsnorm_init(d, dtype),
+        "ffn": {
+            "w_gate": nn.dense_init(ks[5], d, (4 * d) // 3, dtype, use_bias=False),
+            "w_up": nn.dense_init(ks[5], d, (4 * d) // 3, dtype, use_bias=False),
+            "w_down": nn.dense_init(ks[6], (4 * d) // 3, d, dtype, use_bias=False),
+        },
+    }
+
+
+def slstm_apply(p, cfg: ModelConfig, x, state=None):
+    """x: (B,T,d). state dict(c,n,m,h) each (B,H,hd) for decode carry."""
+    d = cfg.d_model
+    H = cfg.ssm.n_ssm_heads
+    hd = d // H
+    B, T, _ = x.shape
+    xn = nn.rmsnorm(p["norm"], x)
+    zi = nn.dense(p["w_z"], xn).reshape(B, T, H, hd)
+    ii = nn.dense(p["w_i"], xn).reshape(B, T, H, hd)
+    fi = nn.dense(p["w_f"], xn).reshape(B, T, H, hd)
+    oi = nn.dense(p["w_o"], xn).reshape(B, T, H, hd)
+
+    if state is None:
+        zero = jnp.zeros((B, H, hd), jnp.float32)
+        state = {"c": zero, "n": zero, "m": zero - 1e30, "h": zero}
+
+    R = p["R"].astype(jnp.float32)
+
+    def step(carry, xs):
+        c, n, m, h = carry
+        zt, it, ft, ot = (t.astype(jnp.float32) for t in xs)
+        rec = jnp.einsum("bhd,ghde->gbhe", h, R)               # (4,B,H,hd)
+        z = jnp.tanh(zt + rec[0])
+        li = it + rec[1]
+        lf = jax.nn.log_sigmoid(ft + rec[2])
+        o = jax.nn.sigmoid(ot + rec[3])
+        m_new = jnp.maximum(lf + m, li)
+        fp = jnp.exp(lf + m - m_new)
+        ip = jnp.exp(li - m_new)
+        c = fp * c + ip * z
+        n = fp * n + ip
+        h_new = o * c / jnp.maximum(n, 1e-6)
+        return (c, n, m_new, h_new), h_new
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (zi, ii, fi, oi))
+    (c, n, m, hfin), hs = jax.lax.scan(
+        step, (state["c"], state["n"], state["m"], state["h"]), xs)
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, T, d).astype(x.dtype)
+    h = nn.rmsnorm(p["out_norm"], h)
+    x = x + h
+    f = p["ffn"]
+    x = x + (jax.nn.gelu(x @ f["w_gate"]["w"]) * (x @ f["w_up"]["w"])) @ f["w_down"]["w"]
+    return x, {"c": c, "n": n, "m": m, "h": hfin}
+
+
+def slstm_empty_state(cfg: ModelConfig, batch: int):
+    H = cfg.ssm.n_ssm_heads
+    hd = cfg.d_model // H
+    zero = jnp.zeros((batch, H, hd), jnp.float32)
+    return {"c": zero, "n": zero, "m": zero - 1e30, "h": zero}

@@ -1,0 +1,187 @@
+"""Layer stacks for the SSM / hybrid architectures.
+
+* xLSTM stack (xlstm-350m): groups of (slstm_every-1) mLSTM blocks + 1 sLSTM
+  block, scanned over groups.
+* zamba2-style hybrid: superblocks of (attn_every-1) Mamba2 blocks + ONE
+  SHARED-parameter attention+FFN block (zamba2's signature trick: the
+  attention block weights are reused at every occurrence, but each occurrence
+  keeps its own KV cache). Deviation noted in DESIGN.md: zamba2's
+  per-occurrence LoRA deltas on the shared block are omitted.
+
+Both stacks expose (init, forward, empty_state) with the same state-stacking
+convention as ``transformer.apply_decoder``: states stacked (n_groups, ...)
+and consumed/emitted through lax.scan.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import nn, ssm
+from repro.models import transformer as tfm
+
+
+def _stack_states(states):
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *states)
+
+
+def _unstack(tree, i):
+    return jax.tree_util.tree_map(lambda x: x[i], tree)
+
+
+# ---------------------------------------------------------------------------
+# xLSTM stack
+# ---------------------------------------------------------------------------
+
+def xlstm_group_layout(cfg: ModelConfig):
+    gs = cfg.ssm.slstm_every
+    assert cfg.n_layers % gs == 0, (cfg.n_layers, gs)
+    return gs, cfg.n_layers // gs          # (group_size, n_groups)
+
+
+def xlstm_init(key, cfg: ModelConfig, dtype):
+    gs, ng = xlstm_group_layout(cfg)
+    k_e, k_b, k_h = jax.random.split(key, 3)
+
+    def group_init(k):
+        ks = jax.random.split(k, gs)
+        return {
+            "mlstm": [ssm.mlstm_init(ks[i], cfg, dtype) for i in range(gs - 1)],
+            "slstm": ssm.slstm_init(ks[-1], cfg, dtype),
+        }
+
+    return {
+        "embed": nn.embed_init(k_e, cfg.padded_vocab, cfg.d_model, dtype),
+        "blocks": nn.stacked_init(k_b, ng, group_init),
+        "final_norm": nn.rmsnorm_init(cfg.d_model, dtype),
+        "lm_head": nn.dense_init(k_h, cfg.d_model, cfg.padded_vocab, dtype,
+                                 use_bias=False),
+    }
+
+
+def xlstm_empty_state(cfg: ModelConfig, batch: int):
+    gs, ng = xlstm_group_layout(cfg)
+    one = {
+        "mlstm": [ssm.mlstm_empty_state(cfg, batch) for _ in range(gs - 1)],
+        "slstm": ssm.slstm_empty_state(cfg, batch),
+    }
+    return _stack_states([one] * ng)
+
+
+def xlstm_forward(params, cfg: ModelConfig, tokens, state=None):
+    """Returns (logits, new_state). state=None -> fresh zeros (training)."""
+    gs, ng = xlstm_group_layout(cfg)
+    h = nn.embed(params["embed"], tokens)
+    b = h.shape[0]
+
+    def group_body(h, xs):
+        gp, gstate = xs
+        new = {"mlstm": [], "slstm": None}
+        for i in range(gs - 1):
+            st = None if gstate is None else gstate["mlstm"][i]
+            h, ns = ssm.mlstm_apply(gp["mlstm"][i], cfg, h, st)
+            new["mlstm"].append(ns)
+        st = None if gstate is None else gstate["slstm"]
+        h, ns = ssm.slstm_apply(gp["slstm"], cfg, h, st)
+        new["slstm"] = ns
+        return h, new
+
+    if state is None:
+        state = xlstm_empty_state(cfg, b)
+    body = tfm._remat_wrap(group_body, cfg)
+    h, new_states = jax.lax.scan(body, h, (params["blocks"], state))
+    h = nn.rmsnorm(params["final_norm"], h)
+    logits = (h @ params["lm_head"]["w"]).astype(jnp.float32)
+    return logits, new_states
+
+
+# ---------------------------------------------------------------------------
+# zamba2-style hybrid stack
+# ---------------------------------------------------------------------------
+
+def hybrid_group_layout(cfg: ModelConfig):
+    ae = cfg.attn_every
+    assert ae >= 2 and cfg.n_layers % ae == 0, (cfg.n_layers, ae)
+    return ae, cfg.n_layers // ae          # group = (ae-1) mamba + 1 shared attn
+
+
+def hybrid_init(key, cfg: ModelConfig, dtype):
+    ae, ng = hybrid_group_layout(cfg)
+    k_e, k_b, k_s, k_h = jax.random.split(key, 4)
+
+    def group_init(k):
+        ks = jax.random.split(k, ae - 1)
+        return {"mamba": [ssm.mamba2_init(ks[i], cfg, dtype)
+                          for i in range(ae - 1)]}
+
+    return {
+        "embed": nn.embed_init(k_e, cfg.padded_vocab, cfg.d_model, dtype),
+        "blocks": nn.stacked_init(k_b, ng, group_init),
+        # the SHARED attention+FFN block: one copy, applied every group
+        "shared_attn": tfm.layer_init(k_s, cfg, dtype, use_moe=False),
+        "final_norm": nn.rmsnorm_init(cfg.d_model, dtype),
+        "lm_head": nn.dense_init(k_h, cfg.d_model, cfg.padded_vocab, dtype,
+                                 use_bias=False),
+    }
+
+
+def hybrid_empty_state(cfg: ModelConfig, batch: int, seq_len: int,
+                       cache_dtype=jnp.bfloat16):
+    """Mamba states + one KV cache per shared-attention occurrence."""
+    ae, ng = hybrid_group_layout(cfg)
+    kvh, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    one = {
+        "mamba": [ssm.mamba2_empty_state(cfg, batch) for _ in range(ae - 1)],
+        "attn_kv": {
+            "k": jnp.zeros((batch, seq_len, kvh, hd), cache_dtype),
+            "v": jnp.zeros((batch, seq_len, kvh, hd), cache_dtype),
+        },
+    }
+    return _stack_states([one] * ng)
+
+
+def hybrid_forward(params, cfg: ModelConfig, tokens, state=None,
+                   mode: str = "train", decode_pos=None):
+    """Returns (logits, new_state)."""
+    ae, ng = hybrid_group_layout(cfg)
+    h = nn.embed(params["embed"], tokens)
+    b, s = tokens.shape
+    if mode == "decode":
+        q_pos = jnp.full((b, s), decode_pos, jnp.int32)
+    else:
+        q_pos = jnp.arange(s, dtype=jnp.int32)[None, :].repeat(b, 0)
+    shared = params["shared_attn"]
+
+    def train_body(h, gp):
+        for i in range(ae - 1):
+            h, _ = ssm.mamba2_apply(gp["mamba"][i], cfg, h)
+        h, _, _ = tfm.layer_apply(shared, cfg, h, q_pos, window=None,
+                                  mode="train")
+        return h, None
+
+    def stateful_body(h, xs):
+        gp, gstate = xs
+        new = {"mamba": []}
+        for i in range(ae - 1):
+            h, ns = ssm.mamba2_apply(gp["mamba"][i], cfg, h, gstate["mamba"][i])
+            new["mamba"].append(ns)
+        h, nkv, _ = tfm.layer_apply(shared, cfg, h, q_pos, window=None,
+                                    mode=mode, cache_kv=gstate["attn_kv"],
+                                    decode_pos=decode_pos)
+        new["attn_kv"] = nkv
+        return h, new
+
+    if mode == "train" and state is None:
+        body = tfm._remat_wrap(train_body, cfg)
+        h, new_states = jax.lax.scan(body, h, params["blocks"])
+    else:
+        if state is None:
+            raise ValueError("prefill/decode need a state pytree")
+        body = tfm._remat_wrap(stateful_body, cfg)
+        h, new_states = jax.lax.scan(body, h, (params["blocks"], state))
+    h = nn.rmsnorm(params["final_norm"], h)
+    logits = (h @ params["lm_head"]["w"]).astype(jnp.float32)
+    return logits, new_states

@@ -1,0 +1,478 @@
+"""Decoder transformer family: dense / GQA / MoE / sliding-window / softcap.
+
+Covers starcoder2, granite, yi, gemma2 (alt local/global + softcaps + post
+norms), deepseek-moe, qwen3-moe (QK-norm), and the pixtral language decoder
+(vision prefix embeds). Whisper (enc-dec) composes these pieces in
+``whisper.py``; SSM/hybrid blocks live in ``ssm.py``.
+
+Systems notes (TPU):
+* layers are scanned over stacked params (O(1) compile cost in depth);
+* attention is query-chunked (exact, not an approximation) so 32k-token
+  prefill never materializes an (S, S) score matrix;
+* decode reads a KV cache laid out (B, S, KV, hd) and sharded on the
+  *sequence* axis across the 'model' mesh axis (flash-decoding style) —
+  GSPMD turns the softmax/contraction over the sharded axis into the
+  partial-softmax + combine schedule;
+* remat policy per config ('none' | 'dots' | 'full').
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import moe as moe_lib
+from repro.models import nn
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return theta ** (-jnp.arange(0, head_dim // 2, dtype=jnp.float32) / (head_dim // 2))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: (..., S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                     # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., None, :]                  # (..., S, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def attn_init(key, cfg: ModelConfig, dtype):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": nn.dense_init(ks[0], d, h * hd, dtype, use_bias=False),
+        "wk": nn.dense_init(ks[1], d, kv * hd, dtype, use_bias=False),
+        "wv": nn.dense_init(ks[2], d, kv * hd, dtype, use_bias=False),
+        "wo": nn.dense_init(ks[3], h * hd, d, dtype, use_bias=False),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = nn.rmsnorm_init(hd, dtype)
+        p["k_norm"] = nn.rmsnorm_init(hd, dtype)
+    return p
+
+
+def _softcap(logits, cap: Optional[float]):
+    if cap is None:
+        return logits
+    return cap * jnp.tanh(logits / cap)
+
+
+def probe_unroll() -> bool:
+    """Dry-run probe mode: inner loops are unrolled so XLA's cost analysis
+    (which counts a while body once) sees every iteration. See dryrun.py."""
+    import os
+    return os.environ.get("REPRO_UNROLL_INNER", "") == "1"
+
+
+def _pick_q_chunk(sq: int) -> int:
+    if sq <= 2048:
+        return sq
+    for c in (2048, 1024, 512, 256):
+        if sq % c == 0:
+            return c
+    return sq
+
+
+def _attend(q, k, v, q_pos, kv_pos, *, causal: bool, window: Optional[int],
+            softcap: Optional[float]):
+    """q: (B, Sq, H, hd); k/v: (B, Skv, KV, hd). Exact, query-chunked.
+
+    Masks: causal (q_pos >= kv_pos) and optional sliding window
+    (q_pos - kv_pos < window). kv_pos entries < 0 mark invalid cache slots.
+    """
+    b, sq, h, hd = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    groups = h // kvh
+    scale = 1.0 / math.sqrt(hd)
+    q_chunk = _pick_q_chunk(sq)
+    qg = q.reshape(b, sq, kvh, groups, hd)
+
+    def chunk_attn(q_c, qpos_c):
+        # q_c: (B, C, KV, G, hd)
+        logits = jnp.einsum("bckgd,bskd->bckgs", q_c.astype(jnp.float32),
+                            k.astype(jnp.float32)) * scale
+        logits = _softcap(logits, softcap)
+        mask = kv_pos[:, None, :] >= 0                          # (B,1,Skv)
+        if causal:
+            mask &= qpos_c[:, :, None] >= kv_pos[:, None, :]
+        if window is not None:
+            mask &= (qpos_c[:, :, None] - kv_pos[:, None, :]) < window
+        logits = jnp.where(mask[:, :, None, None, :], logits, -1e30)
+        w = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bckgs,bskd->bckgd", w, v.astype(jnp.float32))
+        return out.astype(q.dtype)
+
+    if sq <= q_chunk:
+        out = chunk_attn(qg, q_pos)
+    else:
+        n_chunks = sq // q_chunk
+        assert sq % q_chunk == 0, (sq, q_chunk)
+        qs = qg.reshape(b, n_chunks, q_chunk, kvh, groups, hd).transpose(1, 0, 2, 3, 4, 5)
+        ps = q_pos.reshape(b, n_chunks, q_chunk).transpose(1, 0, 2)
+        if probe_unroll():
+            out = jnp.stack([chunk_attn(qs[i], ps[i]) for i in range(n_chunks)])
+        else:
+            out = jax.lax.map(lambda args: chunk_attn(*args), (qs, ps))
+        out = out.transpose(1, 0, 2, 3, 4, 5).reshape(b, sq, kvh, groups, hd)
+    return out.reshape(b, sq, h, hd)
+
+
+def attention(p, cfg: ModelConfig, x, q_pos, *, layer_window: Optional[int],
+              mode: str, cache_kv=None, decode_pos=None):
+    """Self-attention with optional KV cache.
+
+    mode 'train'/'prefill': full sequence, returns (out, new_cache or None).
+    mode 'decode': x is (B, 1, d); cache_kv = {'k','v'} (B, Smax, KV, hd),
+    decode_pos scalar int32 — the current position (same across batch).
+    """
+    b, s, d = x.shape
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = nn.dense(p["wq"], x).reshape(b, s, h, hd)
+    k = nn.dense(p["wk"], x).reshape(b, s, kvh, hd)
+    v = nn.dense(p["wv"], x).reshape(b, s, kvh, hd)
+    if cfg.qk_norm:
+        q = nn.rmsnorm(p["q_norm"], q)
+        k = nn.rmsnorm(p["k_norm"], k)
+    if cfg.use_rope:
+        q = apply_rope(q, q_pos, cfg.rope_theta)
+        k = apply_rope(k, q_pos, cfg.rope_theta)
+
+    new_cache = None
+    if mode == "decode":
+        assert cache_kv is not None
+        smax = cache_kv["k"].shape[1]
+        ck = jax.lax.dynamic_update_slice(
+            cache_kv["k"], k.astype(cache_kv["k"].dtype), (0, decode_pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache_kv["v"], v.astype(cache_kv["v"].dtype), (0, decode_pos, 0, 0))
+        new_cache = {"k": ck, "v": cv}
+        kv_pos = jnp.arange(smax, dtype=jnp.int32)[None, :].repeat(b, 0)
+        kv_pos = jnp.where(kv_pos <= decode_pos, kv_pos, -1)   # future slots invalid
+        out = _attend(q, ck, cv, q_pos, kv_pos, causal=False,
+                      window=layer_window, softcap=cfg.attn_softcap)
+    else:
+        kv_pos = q_pos
+        out = _attend(q, k, v, q_pos, kv_pos, causal=True,
+                      window=layer_window, softcap=cfg.attn_softcap)
+        if mode == "prefill":
+            new_cache = {"k": k, "v": v}
+    return nn.dense(p["wo"], out.reshape(b, s, h * hd)), new_cache
+
+
+# ---------------------------------------------------------------------------
+# FFN / layer
+# ---------------------------------------------------------------------------
+
+def ffn_init(key, cfg: ModelConfig, dtype, d_ff: Optional[int] = None):
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.glu:
+        return {
+            "w_gate": nn.dense_init(ks[0], d, ff, dtype, use_bias=False),
+            "w_up": nn.dense_init(ks[1], d, ff, dtype, use_bias=False),
+            "w_down": nn.dense_init(ks[2], ff, d, dtype, use_bias=False),
+        }
+    return {
+        "w_in": nn.dense_init(ks[0], d, ff, dtype),
+        "w_out": nn.dense_init(ks[1], ff, d, dtype),
+    }
+
+
+def ffn(p, cfg: ModelConfig, x):
+    a = nn.ACTS[cfg.act]
+    if "w_gate" in p:
+        return (a(x @ p["w_gate"]["w"]) * (x @ p["w_up"]["w"])) @ p["w_down"]["w"]
+    return nn.dense(p["w_out"], a(nn.dense(p["w_in"], x)))
+
+
+def layer_init(key, cfg: ModelConfig, dtype, *, use_moe: bool,
+               dense_ff: Optional[int] = None):
+    ka, kf, _ = jax.random.split(key, 3)
+    p = {
+        "ln1": nn.norm_init(cfg.norm, cfg.d_model, dtype),
+        "attn": attn_init(ka, cfg, dtype),
+        "ln2": nn.norm_init(cfg.norm, cfg.d_model, dtype),
+    }
+    if use_moe:
+        p["moe"] = moe_lib.init(kf, cfg.d_model, cfg.moe, dtype)
+    else:
+        p["mlp"] = ffn_init(kf, cfg, dtype, dense_ff)
+    if cfg.post_norms:
+        p["ln1_post"] = nn.norm_init(cfg.norm, cfg.d_model, dtype)
+        p["ln2_post"] = nn.norm_init(cfg.norm, cfg.d_model, dtype)
+    return p
+
+
+def layer_apply(p, cfg: ModelConfig, x, q_pos, *, window, mode,
+                cache_kv=None, decode_pos=None):
+    """One (attn + ffn/moe) layer. Returns (x, new_cache, aux_loss)."""
+    hN = nn.norm_apply(cfg.norm, p["ln1"], x)
+    attn_out, new_cache = attention(p["attn"], cfg, hN, q_pos,
+                                    layer_window=window, mode=mode,
+                                    cache_kv=cache_kv, decode_pos=decode_pos)
+    if cfg.post_norms:
+        attn_out = nn.norm_apply(cfg.norm, p["ln1_post"], attn_out)
+    x = x + attn_out
+    hN = nn.norm_apply(cfg.norm, p["ln2"], x)
+    aux = jnp.zeros((), jnp.float32)
+    if "moe" in p:
+        # NOTE (SPerf iteration 7, REFUTED): flattening the B single-token
+        # decode rows into one dispatch group to avoid the per-row capacity
+        # floor (E/k x compute waste) was measured 7x WORSE on collectives —
+        # the (1, B, d) reshape destroys the batch-data sharding and GSPMD
+        # reshards the whole FFN block every layer. A true fix needs
+        # shard_map + all-to-all token routing; left as future work.
+        ff_out, aux = moe_lib.apply(p["moe"], hN, cfg.moe, cfg.act)
+    else:
+        ff_out = ffn(p["mlp"], cfg, hN)
+    if cfg.post_norms:
+        ff_out = nn.norm_apply(cfg.norm, p["ln2_post"], ff_out)
+    return x + ff_out, new_cache, aux
+
+
+def attention_fixup(p, cfg):  # placeholder for head-padding hooks
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Decoder stack: scan over layer groups
+# ---------------------------------------------------------------------------
+
+def group_structure(cfg: ModelConfig):
+    """(group_size, n_groups, windows_per_group). gemma2 alternates
+    (local, global); others are homogeneous."""
+    n_scanned = cfg.n_layers - _n_first_dense(cfg)
+    if cfg.layer_pattern == "alt_local_global":
+        assert n_scanned % 2 == 0
+        return 2, n_scanned // 2, (cfg.sliding_window, None)
+    return 1, n_scanned, (cfg.sliding_window,)
+
+
+def _n_first_dense(cfg: ModelConfig) -> int:
+    return cfg.moe.first_dense_layers if cfg.moe else 0
+
+
+def _use_moe(cfg: ModelConfig) -> bool:
+    return cfg.moe is not None
+
+
+def init(key, cfg: ModelConfig, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    gs, ng, _ = group_structure(cfg)
+    k_e, k_b, k_f, k_h, k_d = jax.random.split(key, 5)
+    params: dict = {
+        "embed": nn.embed_init(k_e, cfg.padded_vocab, cfg.d_model, dtype),
+        "final_norm": nn.norm_init(cfg.norm, cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = nn.dense_init(k_h, cfg.d_model, cfg.padded_vocab,
+                                          dtype, use_bias=False)
+
+    def group_init(k):
+        ks = jax.random.split(k, gs)
+        return {"layers": [layer_init(ks[i], cfg, dtype, use_moe=_use_moe(cfg))
+                           for i in range(gs)]}
+
+    params["blocks"] = nn.stacked_init(k_b, ng, group_init)
+    nfd = _n_first_dense(cfg)
+    if nfd:
+        dense_ff = cfg.moe.d_ff_expert * (cfg.moe.top_k + cfg.moe.n_shared_experts)
+        ks = jax.random.split(k_f, nfd)
+        params["first_layers"] = [
+            layer_init(ks[i], cfg, dtype, use_moe=False, dense_ff=dense_ff)
+            for i in range(nfd)]
+    if cfg.frontend == "vision":
+        params["vision_proj"] = nn.dense_init(k_d, cfg.d_model, cfg.d_model,
+                                              dtype, use_bias=False)
+    return params
+
+
+def seq_parallel_constraint(h):
+    """Megatron-style sequence parallelism for the scan carry: between layer
+    groups the residual stream (B, S, d) is sharded (data@B, model@S, -) so
+    saved-for-backward carries are 1/|model| the size.
+
+    SPerf iteration 6 tried sharding d_model instead of the sequence
+    (hypothesis: it would match the TP layer layout and avoid resharding
+    churn). REFUTED hard: tx grew 1.5-5.8x (yi train 7.7 s -> 44.5 s) and
+    temp memory exploded to 103 GB — d-sharded carries force full-d
+    all-gathers inside every layer AND break GSPMD's batch propagation.
+    Sequence sharding stays."""
+    try:
+        m = jax.sharding.get_abstract_mesh()
+        if m is None or "model" not in m.axis_names or h.ndim != 3:
+            return h
+        dp = tuple(a for a in ("pod", "data") if a in m.axis_names)
+        sizes = dict(zip(m.axis_names, m.shape.values())) if isinstance(
+            m.shape, dict) else dict(m.shape)
+        ms = sizes.get("model", 1)
+        ds = 1
+        for a in dp:
+            ds *= sizes.get(a, 1)
+        if ms <= 1 or h.shape[1] % ms or (dp and h.shape[0] % ds):
+            return h
+        from jax.sharding import PartitionSpec as _P
+        spec = _P(dp if dp else None, "model", None)
+        return jax.lax.with_sharding_constraint(h, spec)
+    except Exception:
+        return h
+
+
+def _remat_wrap(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "full":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+    return jax.checkpoint(
+        fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+
+
+def empty_cache(cfg: ModelConfig, batch: int, seq_len: int, dtype=jnp.bfloat16):
+    """Stacked KV cache pytree: blocks (G, gs, B, S, KV, hd) + first layers."""
+    gs, ng, _ = group_structure(cfg)
+    kvh, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    mk = lambda *lead: {
+        "k": jnp.zeros((*lead, batch, seq_len, kvh, hd), dtype),
+        "v": jnp.zeros((*lead, batch, seq_len, kvh, hd), dtype),
+    }
+    cache = {"blocks": mk(ng, gs)}
+    nfd = _n_first_dense(cfg)
+    if nfd:
+        cache["first"] = mk(nfd)
+    return cache
+
+
+def apply_decoder(params, cfg: ModelConfig, h, q_pos, *, mode: str,
+                  cache=None, decode_pos=None):
+    """Run the layer stack on embeddings h (B, S, d).
+
+    Returns (h, new_cache, aux_sum). Cache pytrees follow ``empty_cache``.
+    """
+    gs, ng, windows = group_structure(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    nfd = _n_first_dense(cfg)
+    new_first = []
+    for i in range(nfd):
+        ckv = None if cache is None else jax.tree_util.tree_map(
+            lambda x: x[i], cache["first"])
+        h, nc, aux = layer_apply(params["first_layers"][i], cfg, h, q_pos,
+                                 window=None, mode=mode, cache_kv=ckv,
+                                 decode_pos=decode_pos)
+        aux_total += aux
+        new_first.append(nc)
+
+    def group_body(carry, xs):
+        h, aux_acc = carry
+        if mode == "train":
+            h = seq_parallel_constraint(h)
+        if cache is None:
+            gp, gcache = xs, [None] * gs
+        else:
+            gp, gc = xs
+            gcache = [jax.tree_util.tree_map(lambda x: x[i], gc) for i in range(gs)]
+        new_gc = []
+        for i in range(gs):
+            h, nc, aux = layer_apply(gp["layers"][i], cfg, h, q_pos,
+                                     window=windows[i], mode=mode,
+                                     cache_kv=gcache[i], decode_pos=decode_pos)
+            aux_acc = aux_acc + aux
+            new_gc.append(nc)
+        ys = None
+        if new_gc[0] is not None:
+            ys = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *new_gc)
+        return (h, aux_acc), ys
+
+    body = _remat_wrap(group_body, cfg)
+    xs = params["blocks"] if cache is None else (params["blocks"], cache["blocks"])
+    (h, aux_total), block_caches = jax.lax.scan(body, (h, aux_total), xs)
+
+    new_cache = None
+    if block_caches is not None:
+        new_cache = {"blocks": block_caches}
+        if nfd:
+            new_cache["first"] = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *new_first)
+    return h, new_cache, aux_total
+
+
+def logits_fn(params, cfg: ModelConfig, h):
+    if cfg.tie_embeddings:
+        logits = h @ params["embed"]["table"].T
+    else:
+        logits = h @ params["lm_head"]["w"]
+    logits = logits.astype(jnp.float32)
+    return _softcap(logits, cfg.final_softcap)
+
+
+def embed_tokens(params, cfg: ModelConfig, tokens):
+    h = nn.embed(params["embed"], tokens)
+    if cfg.scale_embeddings:
+        h = (h.astype(jnp.float32) * math.sqrt(cfg.d_model)).astype(h.dtype)
+    return h
+
+
+def forward(params, cfg: ModelConfig, tokens, *, prefix_embeds=None,
+            mode: str = "train", cache=None, decode_pos=None):
+    """tokens: (B, S) int32. prefix_embeds: (B, P, d) for VLM image patches.
+
+    Returns (logits (B, S_total, V), new_cache, aux)."""
+    h = embed_tokens(params, cfg, tokens)
+    b = h.shape[0]
+    if prefix_embeds is not None:
+        pe = prefix_embeds.astype(h.dtype)
+        if "vision_proj" in params:
+            pe = nn.dense(params["vision_proj"], pe)
+        h = jnp.concatenate([pe, h], axis=1)
+    s = h.shape[1]
+    if mode == "decode":
+        q_pos = jnp.full((b, s), decode_pos, jnp.int32)
+    else:
+        q_pos = jnp.arange(s, dtype=jnp.int32)[None, :].repeat(b, 0)
+    h, new_cache, aux = apply_decoder(params, cfg, h, q_pos, mode=mode,
+                                      cache=cache, decode_pos=decode_pos)
+    h = nn.norm_apply(cfg.norm, params["final_norm"], h)
+    return logits_fn(params, cfg, h), new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Losses / steps
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits, labels, vocab_size: int):
+    """Mean CE over labels >= 0; logits may be padded past vocab_size."""
+    lse = jax.nn.logsumexp(logits[..., :vocab_size], axis=-1)
+    gold = jnp.take_along_axis(logits, jnp.maximum(labels, 0)[..., None],
+                               axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    ce = (lse - gold) * mask
+    return ce.sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def train_loss(params, cfg: ModelConfig, batch):
+    logits, _, aux = forward(params, cfg, batch["tokens"],
+                             prefix_embeds=batch.get("prefix_embeds"),
+                             mode="train")
+    s_tok = batch["tokens"].shape[1]
+    logits = logits[:, -s_tok:]                     # drop prefix positions
+    loss = cross_entropy(logits, batch["labels"], cfg.vocab_size)
+    if cfg.moe is not None:
+        loss = loss + cfg.moe.router_aux_weight * aux
+    return loss

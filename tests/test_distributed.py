@@ -1,0 +1,28 @@
+"""Spawns subprocess checks that need >1 jax device (device count is locked at
+first jax init, so these cannot run in the main pytest process)."""
+import os
+import subprocess
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+SRC = os.path.join(os.path.dirname(HERE), "src")
+
+
+def run_script(name, timeout=900):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, os.path.join(HERE, name)],
+                          capture_output=True, text=True, timeout=timeout,
+                          env=env)
+    assert proc.returncode == 0, f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
+    return proc.stdout
+
+
+def test_distributed_mgn_schemes():
+    out = run_script("_dist_check.py")
+    assert "ALL_OK" in out
+
+
+def test_dryrun_machinery_small_mesh():
+    out = run_script("_dryrun_check.py")
+    assert "ALL_OK" in out

@@ -1,0 +1,121 @@
+"""Graph construction (paper SIII-B/C): point sampling, k-NN connectivity,
+multi-scale nesting, partitioner quality, Fourier features."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import graph_build as gb
+from repro.core import multiscale as ms
+from repro.core import partitioning as part
+from repro.data import geometry as geo
+
+
+def test_surface_sampling_on_triangles():
+    """Sampled points must lie on the sampled triangles (barycentric)."""
+    verts = np.array([[0, 0, 0], [1, 0, 0], [0, 1, 0], [1, 1, 1]], float)
+    faces = np.array([[0, 1, 2], [1, 2, 3]])
+    rng = np.random.default_rng(0)
+    pts, normals = gb.sample_surface(verts, faces, 500, rng)
+    assert pts.shape == (500, 3) and normals.shape == (500, 3)
+    np.testing.assert_allclose(np.linalg.norm(normals, axis=1), 1.0, rtol=1e-5)
+    # every point lies on one of the two triangle planes
+    n1 = np.cross(verts[1] - verts[0], verts[2] - verts[0])
+    n2 = np.cross(verts[2] - verts[1], verts[3] - verts[1])
+    d1 = np.abs((pts - verts[0]) @ n1) / np.linalg.norm(n1)
+    d2 = np.abs((pts - verts[1]) @ n2) / np.linalg.norm(n2)
+    assert np.all(np.minimum(d1, d2) < 1e-5)
+
+
+def test_area_weighted_sampling():
+    """A triangle with 99% of the area receives ~99% of the points."""
+    verts = np.array([[0, 0, 0], [10, 0, 0], [0, 10, 0],
+                      [100, 100, 0], [100.1, 100, 0], [100, 100.1, 0]], float)
+    faces = np.array([[0, 1, 2], [3, 4, 5]])
+    rng = np.random.default_rng(1)
+    pts, _ = gb.sample_surface(verts, faces, 2000, rng)
+    frac_big = np.mean(pts[:, 0] < 50)
+    assert frac_big > 0.99
+
+
+def test_knn_edges_match_bruteforce():
+    rng = np.random.default_rng(2)
+    pts = rng.random((80, 3))
+    k = 4
+    s, r = gb.knn_edges(pts, k, bidirectional=False)
+    # brute force
+    d = np.linalg.norm(pts[:, None] - pts[None], axis=-1)
+    np.fill_diagonal(d, np.inf)
+    for i in range(80):
+        mine = set(s[r == i].tolist())
+        want = set(np.argsort(d[i])[:k].tolist())
+        assert mine == want, (i, mine, want)
+
+
+def test_knn_bidirectional_symmetry():
+    rng = np.random.default_rng(3)
+    pts = rng.random((60, 3))
+    s, r = gb.knn_edges(pts, 3, bidirectional=True)
+    pairs = set(zip(s.tolist(), r.tolist()))
+    assert all((b, a) in pairs for a, b in pairs)
+    assert all(a != b for a, b in pairs)
+
+
+def test_multiscale_nesting_and_level_edges():
+    """Paper SIII-C: each coarse level is a subset (prefix) of the finer one;
+    coarse-level edges span longer distances on average."""
+    params = geo.sample_params(0)
+    verts, faces = geo.car_surface(params, nu=32, nv=16)
+    rng = np.random.default_rng(4)
+    levels = (100, 200, 400)
+    g = ms.build_multiscale_graph(verts, faces, levels, k=4, rng=rng)
+    assert g.n_nodes == 400
+    assert g.level_of_edge is not None
+    lens = np.linalg.norm(g.positions[g.senders] - g.positions[g.receivers],
+                          axis=1)
+    mean_by_level = [lens[g.level_of_edge == l].mean() for l in range(3)]
+    assert mean_by_level[0] > mean_by_level[1] > mean_by_level[2]
+    # coarse edges only connect coarse nodes
+    coarse = (g.level_of_edge == 0)
+    assert g.senders[coarse].max() < levels[0]
+    assert g.receivers[coarse].max() < levels[0]
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(30, 150), parts=st.integers(2, 6),
+       seed=st.integers(0, 100))
+def test_partitioner_balance_and_cover(n, parts, seed):
+    rng = np.random.default_rng(seed)
+    pts = rng.random((n, 3))
+    s, r = gb.knn_edges(pts, 3)
+    labels = part.partition(s, r, n, parts, positions=pts)
+    assert labels.shape == (n,)
+    assert set(np.unique(labels)) <= set(range(parts))
+    stats = part.balance_stats(labels, parts)
+    assert stats["imbalance"] < 1.6
+
+
+def test_refinement_reduces_cut():
+    rng = np.random.default_rng(7)
+    pts = rng.random((400, 3))
+    s, r = gb.knn_edges(pts, 5)
+    raw = part.partition_rcb(pts, 4)
+    refined = part.refine_greedy(s, r, raw, 4, rounds=3)
+    assert part.edge_cut(s, r, refined) <= part.edge_cut(s, r, raw)
+
+
+def test_fourier_features_shape_and_range():
+    x = np.random.default_rng(8).random((10, 3)).astype(np.float32)
+    f = gb.fourier_features(x, (2.0, 4.0, 8.0))
+    assert f.shape == (10, 18)
+    assert np.all(np.abs(f) <= 1.0 + 1e-6)
+    feats = gb.node_input_features(x, np.ones_like(x), (2.0, 4.0, 8.0))
+    assert feats.shape == (10, 24)     # paper SV-D: 24 input features
+
+
+def test_radius_edges_within_radius():
+    rng = np.random.default_rng(9)
+    pts = rng.random((100, 3)).astype(np.float32)
+    s, r = gb.radius_edges(pts, 0.2)
+    if len(s):
+        d = np.linalg.norm(pts[s] - pts[r], axis=1)
+        assert np.all(d <= 0.2 + 1e-6)

@@ -1,0 +1,137 @@
+"""Pallas kernel validation (interpret=True on CPU) against pure-jnp oracles,
+sweeping shapes and dtypes, plus hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.segment_agg import ops as seg_ops
+from repro.kernels.segment_agg import ref as seg_ref
+from repro.kernels.flash_attention import ops as fa_ops
+from repro.kernels.flash_attention import ref as fa_ref
+
+
+# ---------------------------------------------------------------------------
+# segment aggregation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,e,d", [(50, 300, 64), (128, 1000, 128),
+                                   (257, 2000, 96), (1, 10, 8),
+                                   (300, 4096, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_segment_agg_matches_ref(n, e, d, dtype):
+    rng = np.random.default_rng(n + e + d)
+    msgs = jnp.asarray(rng.normal(size=(e, d)).astype(np.float32)).astype(dtype)
+    seg = jnp.asarray(rng.integers(0, n, size=(e,)).astype(np.int32))
+    got = seg_ops.segment_sum(msgs, seg, n)
+    # the kernel accumulates in f32 regardless of input dtype; compare against
+    # the f32-exact oracle, tolerance = one output-dtype rounding step
+    want = seg_ref.segment_sum(msgs.astype(jnp.float32), seg, n)
+    tol = 1e-5 if dtype == jnp.float32 else 1e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol * 8)
+
+
+def test_segment_agg_empty_segments():
+    """Segments with no incoming edges must be exactly zero."""
+    msgs = jnp.ones((8, 16), jnp.float32)
+    seg = jnp.asarray([0, 0, 3, 3, 3, 7, 7, 7], jnp.int32)
+    got = np.asarray(seg_ops.segment_sum(msgs, seg, 10))
+    assert np.all(got[1] == 0) and np.all(got[9] == 0)
+    assert np.allclose(got[0], 2.0) and np.allclose(got[3], 3.0)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(1, 200), e=st.integers(1, 500), d=st.integers(1, 80),
+       seed=st.integers(0, 10_000))
+def test_segment_agg_property(n, e, d, seed):
+    rng = np.random.default_rng(seed)
+    msgs = jnp.asarray(rng.normal(size=(e, d)).astype(np.float32))
+    seg = jnp.asarray(rng.integers(0, n, size=(e,)).astype(np.int32))
+    got = seg_ops.segment_sum(msgs, seg, n)
+    want = seg_ref.segment_sum(msgs, seg, n)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_segment_prep_reusable_across_layers():
+    """prepare() once, apply to different message tensors (per MP layer)."""
+    rng = np.random.default_rng(0)
+    n, e, d = 90, 400, 32
+    seg = rng.integers(0, n, size=(e,)).astype(np.int32)
+    prep = seg_ops.prepare(seg, n)
+    for i in range(3):
+        msgs = jnp.asarray(rng.normal(size=(e, d)).astype(np.float32))
+        got = seg_ops.segment_sum_prepared(prep, msgs)
+        want = seg_ref.segment_sum(msgs, jnp.asarray(seg), n)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+CASES = [
+    # (B, Sq, Skv, H, KV, hd, causal, window, softcap)
+    (1, 128, 128, 2, 2, 64, True, None, None),
+    (2, 256, 256, 4, 2, 64, True, None, None),        # GQA
+    (1, 256, 256, 2, 1, 128, True, 64, None),         # sliding window
+    (1, 128, 128, 2, 2, 64, True, None, 50.0),        # softcap (gemma2)
+    (1, 256, 256, 2, 2, 32, False, None, None),       # bidirectional
+    (2, 384, 384, 8, 8, 64, True, 128, 30.0),         # everything at once
+]
+
+
+@pytest.mark.parametrize("case", CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(case, dtype):
+    b, sq, skv, h, kvh, hd, causal, window, softcap = case
+    rng = np.random.default_rng(hash(case) % 2**32)
+    q = jnp.asarray(rng.normal(size=(b, sq, h, hd)).astype(np.float32)).astype(dtype)
+    k = jnp.asarray(rng.normal(size=(b, skv, kvh, hd)).astype(np.float32)).astype(dtype)
+    v = jnp.asarray(rng.normal(size=(b, skv, kvh, hd)).astype(np.float32)).astype(dtype)
+    got = fa_ops.mha(q, k, v, causal=causal, window=window, softcap=softcap)
+    gs = h // kvh
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * kvh, skv, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * kvh, skv, hd)
+    want = fa_ref.attention(qf, kf, vf, group_size=gs, causal=causal,
+                            window=window, softcap=softcap)
+    want = want.reshape(b, h, sq, hd).transpose(0, 2, 1, 3)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_attention_first_row_attends_self_only():
+    """Causal row 0 output must equal v[0] exactly (softmax over one key)."""
+    rng = np.random.default_rng(3)
+    q = jnp.asarray(rng.normal(size=(1, 128, 1, 64)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(1, 128, 1, 64)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(1, 128, 1, 64)).astype(np.float32))
+    out = fa_ops.mha(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out)[0, 0, 0],
+                               np.asarray(v)[0, 0, 0], rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(sq=st.sampled_from([128, 256]), h=st.sampled_from([1, 2, 4]),
+       hd=st.sampled_from([32, 64]), causal=st.booleans(),
+       seed=st.integers(0, 1000))
+def test_flash_attention_property(sq, h, hd, causal, seed):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(1, sq, h, hd)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(1, sq, h, hd)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(1, sq, h, hd)).astype(np.float32))
+    got = fa_ops.mha(q, k, v, causal=causal)
+    qf = q.transpose(0, 2, 1, 3).reshape(h, sq, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(h, sq, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(h, sq, hd)
+    want = fa_ref.attention(qf, kf, vf, causal=causal)
+    want = want.reshape(1, h, sq, hd).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)
