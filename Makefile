@@ -1,0 +1,17 @@
+PY ?= python
+export PYTHONPATH := src:$(PYTHONPATH)
+
+.PHONY: verify test bench-graph smoke
+
+# tier-1 gate: full test suite + graph-build perf smoke
+verify: test bench-graph
+
+test:
+	$(PY) -m pytest -x -q
+
+bench-graph:
+	cd benchmarks && PYTHONPATH=../src $(PY) bench_graph_build.py --smoke
+
+# quickest end-to-end signal: serving example on a reduced model
+smoke:
+	$(PY) examples/realtime_inference.py

@@ -1,0 +1,124 @@
+"""Host (cKDTree) vs device (hash-grid) graph construction + serving latency.
+
+Three comparisons, all with identical output semantics (same neighbor sets,
+same deduped symmetric edge sets):
+
+  knn        host ``knn_edges`` (cKDTree build + query + unique dedup)
+             vs jitted hash-grid kNN + symmetric closure (warm per-size
+             jit cache — the steady-state serving regime).
+  multiscale host ``multiscale_edges`` union vs the device multi-scale
+             edge builder.
+  serve      end-to-end request latency through ``GNNServer`` (graph build
+             + featurization + model forward inside one XLA program).
+
+Usage:
+  PYTHONPATH=src python benchmarks/bench_graph_build.py [--smoke]
+
+Emits CSV rows: name,us,derived (matching benchmarks/run.py conventions).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from common import emit, timeit
+
+from repro.configs.base import GNNConfig
+from repro.core.graph_build import knn_edges, sample_surface
+from repro.core.multiscale import multiscale_edges as host_multiscale
+from repro.data import geometry as geo
+from repro.graphx import hashgrid
+from repro.graphx.multiscale import (MultiscaleSpec,
+                                     multiscale_edges as dev_multiscale)
+from repro.launch.serve_gnn import GNNServer
+
+
+def _cloud(n: int, seed: int = 0):
+    verts, faces = geo.car_surface(geo.sample_params(seed))
+    return sample_surface(verts, faces, n, np.random.default_rng(seed))
+
+
+def bench_knn(sizes, k: int, rows):
+    for n in sizes:
+        pts, _ = _cloud(n)
+        spec = hashgrid.calibrate_spec(pts, k)
+
+        def host():
+            return knn_edges(pts, k)
+
+        @jax.jit
+        def device(p):
+            idx, _, mask = hashgrid.knn(p, n, spec)
+            return hashgrid.symmetric_edges(idx, mask)
+
+        jp = jnp.asarray(pts)
+        t_host = timeit(lambda: jax.block_until_ready(
+            jnp.asarray(host()[0])))          # include the H2D transfer
+        t_dev = timeit(device, jp)
+        ratio = hashgrid.max_knn_cell_ratio(pts, n, spec)
+        rows.append((f"knn_host_n{n}", t_host, f"k={k}"))
+        rows.append((f"knn_device_n{n}", t_dev,
+                     f"k={k} C={spec.neigh_cap} exact={ratio <= 1.0} "
+                     f"speedup={t_host / t_dev:.2f}x"))
+
+
+def bench_multiscale(sizes, k: int, rows):
+    for n in sizes:
+        levels = (n // 4, n // 2, n)
+        pts, _ = _cloud(n)
+        grids = tuple(hashgrid.calibrate_spec(pts[:m], k, n_points=m)
+                      for m in levels)
+        ms = MultiscaleSpec(level_sizes=levels, k=k, grids=grids)
+
+        def host():
+            return host_multiscale(pts, levels, k)
+
+        @jax.jit
+        def device(p):
+            return dev_multiscale(p, n, ms)
+
+        jp = jnp.asarray(pts)
+        t_host = timeit(lambda: jax.block_until_ready(
+            jnp.asarray(host()[0])))
+        t_dev = timeit(device, jp)
+        rows.append((f"multiscale_host_n{n}", t_host, f"levels={levels}"))
+        rows.append((f"multiscale_device_n{n}", t_dev,
+                     f"levels={levels} speedup={t_host / t_dev:.2f}x"))
+
+
+def bench_serve(bucket: int, n_requests: int, rows):
+    cfg = GNNConfig().reduced()
+    server = GNNServer(cfg, (bucket,), max_batch=4)
+    server.warmup()
+    reqs = []
+    for i in range(n_requests):
+        verts, faces = geo.car_surface(geo.sample_params(i))
+        reqs.append((verts, faces, bucket))
+    server.serve(reqs)
+    rep = server.stats.report()
+    rows.append((f"serve_p50_b{bucket}", rep["p50_ms"] * 1e3,
+                 f"batch={rep['mean_batch']:.1f}"))
+    rows.append((f"serve_p95_b{bucket}", rep["p95_ms"] * 1e3,
+                 f"{rep['throughput_rps']:.1f}req/s"))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes for CI (seconds, not minutes)")
+    ap.add_argument("--k", type=int, default=6)
+    args = ap.parse_args()
+
+    sizes = [2048, 4096] if args.smoke else [4096, 16384, 32768]
+    rows = []
+    bench_knn(sizes, args.k, rows)
+    bench_multiscale(sizes[:2] if args.smoke else sizes[:-1], args.k, rows)
+    bench_serve(512 if args.smoke else 2048, 4 if args.smoke else 8, rows)
+    emit(rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Real-time mesh-free inference: STL-like geometry -> surface pressure.
+
+Demonstrates the paper's headline claim end to end: a raw tessellated
+geometry (triangle soup — what you'd read out of an STL file) goes in, a
+predicted surface-pressure/wall-shear field comes out, with **zero host-side
+graph work in the steady state**: after the one-time bucket calibration and
+compile, every request is surface sampling (numpy) + one jitted XLA call
+that builds the multi-scale graph on device and runs the GNN.
+
+Run:
+  PYTHONPATH=src python examples/realtime_inference.py
+"""
+import time
+
+import numpy as np
+
+from repro.configs.base import GNNConfig
+from repro.data import geometry as geo
+from repro.launch.serve_gnn import GNNServer
+
+N_POINTS = 1024      # bucket resolution (the paper serves 2M on 8xH100)
+
+
+def main():
+    cfg = GNNConfig().reduced()
+    server = GNNServer(cfg, (N_POINTS,), max_batch=2)
+
+    t0 = time.perf_counter()
+    server.warmup()     # one compile per bucket; amortized over all requests
+    print(f"compile+calibrate: {time.perf_counter() - t0:.1f}s (one-time)")
+
+    for i in range(4):
+        verts, faces = geo.car_surface(geo.sample_params(i))  # "read an STL"
+        t0 = time.perf_counter()
+        [result] = server.serve([(verts, faces, N_POINTS)])
+        dt = time.perf_counter() - t0
+        cp, tau = result.fields[:, 0], result.fields[:, 1:]
+        stag = result.points[np.argmax(cp)]
+        print(f"geometry {i}: {len(verts)} verts -> {N_POINTS} pts in "
+              f"{dt * 1e3:.0f} ms | cp [{cp.min():+.2f}, {cp.max():+.2f}] "
+              f"| stagnation at x={stag[0]:+.2f} "
+              f"| mean |tau|={np.linalg.norm(tau, axis=1).mean():.3f}")
+
+    rep = server.stats.report()
+    print(f"steady state: p50 {rep['p50_ms']:.0f} ms, "
+          f"p95 {rep['p95_ms']:.0f} ms, {rep['throughput_rps']:.1f} req/s")
+
+
+if __name__ == "__main__":
+    main()

@@ -25,7 +25,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
-from jax import shard_map
+try:
+    from jax import shard_map
+except ImportError:  # jax < 0.5
+    from jax.experimental.shard_map import shard_map
 
 from repro.configs.base import GNNConfig
 from repro.core import halo as halo_lib

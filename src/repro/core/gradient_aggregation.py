@@ -34,9 +34,13 @@ def tree_pvary(tree, axes: tuple):
         try:
             return jax.lax.pcast(x, tuple(axes), to="varying")
         except (AttributeError, TypeError):
-            return jax.lax.pvary(x, tuple(axes))
+            pass
         except ValueError:
             return x  # already varying over these axes
+        pvary = getattr(jax.lax, "pvary", None)
+        if pvary is not None:
+            return pvary(x, tuple(axes))
+        return x  # legacy shard_map: replication handled by check_rep
     return jax.tree_util.tree_map(_v, tree)
 
 

@@ -58,6 +58,21 @@ def sample_surface(vertices: np.ndarray, faces: np.ndarray, n_points: int,
     return pts.astype(np.float32), normals.astype(np.float32)
 
 
+def vertex_normals(vertices: np.ndarray, faces: np.ndarray) -> np.ndarray:
+    """Per-vertex normals: area-weighted average of incident face normals.
+
+    The unnormalized face cross product *is* the area weighting, so one
+    scatter-add of it per face corner gives the standard smooth normal.
+    """
+    a, b, c = (vertices[faces[:, i]] for i in range(3))
+    fn = np.cross(b - a, c - a)                      # |fn| = 2 * area
+    vn = np.zeros_like(vertices, dtype=np.float64)
+    for i in range(3):
+        np.add.at(vn, faces[:, i], fn)
+    return (vn / np.maximum(np.linalg.norm(vn, axis=-1, keepdims=True),
+                            1e-12)).astype(np.float32)
+
+
 def sample_volume(vertices: np.ndarray, n_points: int,
                   rng: np.random.Generator) -> np.ndarray:
     """Uniform point cloud inside the axis-aligned bounding box of a geometry

@@ -13,7 +13,7 @@ from repro.configs.base import GNNConfig
 from repro.core import halo as halo_lib
 from repro.core import partitioning
 from repro.core.graph import Graph
-from repro.core.graph_build import node_input_features
+from repro.core.graph_build import node_input_features, vertex_normals
 from repro.core.multiscale import build_multiscale_from_points
 from repro.core.gradient_aggregation import padded_partition_batches
 from repro.data import geometry as geo
@@ -71,11 +71,13 @@ def build_sample(cfg: GNNConfig, sample_id: int,
                                      normals=normals)
     feats = node_input_features(points, normals, cfg.fourier_freqs)
     if use_idw:
-        # pipeline-faithful path: evaluate field on the raw mesh vertices and
-        # interpolate onto the point cloud (paper reads .vtp and interpolates)
-        vert_normals = normals  # proxy; analytic field needs normals
-        field_on_mesh = geo.surface_fields(points, normals, params)
-        targets = idw_interpolate(points, field_on_mesh, points)
+        # pipeline-faithful path: evaluate the field on the raw mesh
+        # vertices (with true area-weighted vertex normals) and IDW-
+        # interpolate onto the sampled cloud (paper reads .vtp and
+        # interpolates onto its point cloud, SV-C)
+        vert_normals = vertex_normals(verts, faces)
+        field_on_mesh = geo.surface_fields(verts, vert_normals, params)
+        targets = idw_interpolate(verts, field_on_mesh, points)
     else:
         targets = geo.surface_fields(points, normals, params)
     assert feats.shape[1] == cfg.node_in, (feats.shape, cfg.node_in)
@@ -114,6 +116,33 @@ def partition_sample(cfg: GNNConfig, s: GraphSample,
                              denom=float(g.n_nodes * cfg.node_out))
 
 
+def split_test_ids(drags: np.ndarray, test_frac: float = 0.1,
+                   ood_frac: float = 0.2, seed: int = 0):
+    """Paper SV-B split bookkeeping as a pure function.
+
+    Returns (ood_ids, iid_ids): disjoint sorted lists whose union has exactly
+    ``n_test = max(1, round(test_frac * n))`` elements. OOD ids are the
+    extreme low/high ends of the ``drags`` ordering (half each, odd count
+    leaning low); IID ids are drawn uniformly from the remainder.
+    """
+    n = len(drags)
+    n_test = min(max(1, int(round(test_frac * n))), n)
+    n_ood = min(n_test, max(1, int(round(ood_frac * n_test)))) \
+        if n_test >= 2 else 0
+    order = np.argsort(drags)
+    lo, hi = (n_ood + 1) // 2, n_ood // 2
+    # lo + hi = n_ood <= n, so the head and tail slices cannot overlap
+    # order[n - hi:] is empty when hi == 0, so no guard is needed
+    ood = [int(i) for i in order[:lo]] + [int(i) for i in order[n - hi:]]
+    rest = np.setdiff1d(np.arange(n), np.asarray(ood, np.int64))
+    rng = np.random.default_rng(seed)
+    iid = [int(i) for i in rng.choice(rest, size=n_test - n_ood,
+                                      replace=False)]
+    assert not set(ood) & set(iid)
+    assert len(ood) + len(iid) == n_test
+    return sorted(ood), sorted(iid)
+
+
 def build_dataset(cfg: GNNConfig, n_samples: int, test_frac: float = 0.1):
     """Paper SV-B split: 10% test, of which 20% out-of-distribution by the
     force coefficient (extreme low/high drag proxies)."""
@@ -121,14 +150,8 @@ def build_dataset(cfg: GNNConfig, n_samples: int, test_frac: float = 0.1):
     norm_in = Normalizer.fit([s.node_feats for s in samples])
     norm_out = Normalizer.fit([s.targets for s in samples])
     drags = np.array([integrated_force(s)[0] for s in samples])
-    n_test = max(1, int(round(test_frac * n_samples)))
-    n_ood = max(1, int(round(0.2 * n_test))) if n_test >= 2 else 0
-    order = np.argsort(drags)
-    ood = list(order[: (n_ood + 1) // 2]) + list(order[len(order) - n_ood // 2:])
-    rest = [i for i in range(n_samples) if i not in ood]
-    rng = np.random.default_rng(0)
-    iid_test = list(rng.choice(rest, size=n_test - len(ood[:n_test]), replace=False))
-    test_ids = set(map(int, ood[:n_test])) | set(map(int, iid_test))
+    ood, iid_test = split_test_ids(drags, test_frac)
+    test_ids = set(ood) | set(iid_test)
     train = [s for s in samples if s.sample_id not in test_ids]
     test = [s for s in samples if s.sample_id in test_ids]
     return train, test, norm_in, norm_out

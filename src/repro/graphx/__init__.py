@@ -1,0 +1,15 @@
+"""Device-resident graph construction (hash-grid kNN, multi-scale union,
+fused featurization) + the single-jit inference pipeline built on it.
+
+Host path (numpy/cKDTree, training-time): ``repro.core.graph_build`` /
+``repro.core.multiscale``. Device path (jittable, serving-time): this
+package. The two produce identical graphs when the grid spec is exact
+(see ``hashgrid.max_knn_cell_ratio``), which the tests enforce.
+"""
+from repro.graphx.hashgrid import (GridSpec, auto_spec, knn,  # noqa: F401
+                                   overflow_count, max_knn_cell_ratio,
+                                   symmetric_edges)
+from repro.graphx.multiscale import (MultiscaleSpec,  # noqa: F401
+                                     auto_multiscale_spec, multiscale_edges)
+from repro.graphx.pipeline import (make_batched_infer_fn,  # noqa: F401
+                                   make_infer_fn)

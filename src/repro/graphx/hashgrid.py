@@ -1,0 +1,312 @@
+"""Device-resident hash-grid (cell-list) k-nearest-neighbor search.
+
+Replaces the host-side ``scipy.spatial.cKDTree`` in the serving hot path
+(paper SIII-B: graphs are built directly from sampled geometry — this module
+makes that construction jittable so it runs on the accelerator, fused with
+the model forward pass).
+
+Everything is fixed-shape: for a static ``GridSpec`` the whole search
+compiles once per (n_points, k, resolution, neigh_cap) signature and is
+reused across requests. Points are bucketed into a per-axis-resolved uniform
+grid over their bounding box (anisotropic resolution keeps cells cube-ish on
+elongated bodies like cars). Construction then builds a *compacted
+neighborhood table*: for every cell, the ids of all points in its 27
+surrounding cells, written by one scatter from the (point, offset) side —
+so the candidate width is the actual neighborhood occupancy cap, not
+27 x per-cell capacity. Each query reads its own cell's row and keeps the
+k nearest via ``repro.kernels.knn`` (Pallas kernel or XLA reference).
+
+Exactness: the search is exact whenever every point's k-th neighbor lies
+within one cell width on every axis and no cell neighborhood overflows
+``neigh_cap``. ``calibrate_spec`` picks such a spec from a reference cloud
+at setup time (one host cKDTree query — never in the hot path);
+``overflow_count`` and ``max_knn_cell_ratio`` are the matching diagnostics.
+
+Memory: the neighborhood table is dense over the grid, so ``calibrate_spec``
+bounds the cell count at ``cell_budget * n_points`` (surface clouds occupy
+only O(R^2) of R^3 cells; a compacted occupied-cell CSR layout that removes
+this bound is a ROADMAP item for paper-scale 2M-point serving).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.knn import ops as knn_ops
+
+_OFFSETS = np.array([(dx, dy, dz)
+                     for dx in (-1, 0, 1)
+                     for dy in (-1, 0, 1)
+                     for dz in (-1, 0, 1)], np.int32)        # (27, 3)
+
+
+@dataclass(frozen=True)
+class GridSpec:
+    """Static shape signature of one hash-grid kNN search."""
+    n_points: int                     # padded point-buffer length
+    k: int                            # neighbors per query
+    resolution: Tuple[int, int, int]  # cells per axis (rx, ry, rz)
+    neigh_cap: int                    # candidate capacity per cell nbhd (C)
+
+    @property
+    def n_cells(self) -> int:
+        rx, ry, rz = self.resolution
+        return rx * ry * rz
+
+    @property
+    def n_candidates(self) -> int:
+        return self.neigh_cap
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def auto_spec(n_points: int, k: int = 6, mode: str = "surface",
+              resolution: int | Tuple[int, int, int] | None = None,
+              neigh_cap: int | None = None) -> GridSpec:
+    """Heuristic spec for roughly isotropic uniform point clouds.
+
+    ``mode='surface'``: points on a 2-manifold — occupied cells scale like
+    R^2, so R ~ sqrt(n/k)/2 keeps the cell width above the k-th-neighbor
+    distance with headroom. ``mode='volume'``: R ~ (n/k)^(1/3).
+
+    For real geometries prefer ``calibrate_spec`` (measures the cloud).
+    """
+    if resolution is None:
+        if mode == "surface":
+            r = int(round(math.sqrt(n_points / max(k, 1)) / 2))
+        else:
+            r = int(round((n_points / max(k, 1)) ** (1.0 / 3.0)))
+        resolution = max(2, min(r, 128))
+    if isinstance(resolution, int):
+        resolution = (resolution,) * 3
+    if neigh_cap is None:
+        rx, ry, rz = resolution
+        if mode == "surface":
+            est = n_points / max(rx * ry, 1)   # occupied cells ~ one face
+        else:
+            est = n_points / max(rx * ry * rz, 1)
+        # a 3x3x3 neighborhood crosses the surface in ~9 occupied cells
+        occ_cells = 9 if mode == "surface" else 27
+        neigh_cap = _round_up(max(4 * k, int(math.ceil(3 * occ_cells * est))),
+                              128)
+        neigh_cap = min(neigh_cap, n_points)
+    return GridSpec(n_points=n_points, k=k, resolution=tuple(resolution),
+                    neigh_cap=neigh_cap)
+
+
+def calibrate_spec(points: np.ndarray, k: int, n_points: int | None = None,
+                   cell_safety: float = 1.3,
+                   occupancy_safety: float = 1.5,
+                   cell_budget: float = 8.0) -> GridSpec:
+    """Measure a reference cloud and return an exact-by-construction spec.
+
+    Host-side, setup-time only (one cKDTree query). The cell size is set to
+    ``cell_safety`` times the largest k-th-neighbor distance, so the 27-cell
+    window provably covers every true neighborhood of the reference cloud
+    (and, with the safety margins, of statistically similar clouds — e.g.
+    other geometries sampled at the same resolution in a serving bucket).
+    """
+    from scipy.spatial import cKDTree
+    pts = np.asarray(points, np.float32)
+    n = len(pts)
+    dist, _ = cKDTree(pts).query(pts, k=min(k + 1, n))
+    kth = float(dist[:, -1].max())
+    extent = np.maximum(pts.max(0) - pts.min(0), 1e-6)
+    cell = max(kth * cell_safety, 1e-6)
+    res = tuple(int(max(1, math.floor(e / cell))) for e in extent)
+    # the table is dense over the grid, so bound total cells by
+    # cell_budget * n: growing the cells only loosens the kNN window
+    # (exactness is preserved), at the price of a larger neigh_cap
+    n_cells = res[0] * res[1] * res[2]
+    max_cells = max(int(cell_budget * n), 27)
+    if n_cells > max_cells:
+        shrink = (max_cells / n_cells) ** (1.0 / 3.0)
+        res = tuple(int(max(1, math.floor(r * shrink))) for r in res)
+    occ = int(_neighborhood_counts(pts, res).max())
+    cap = _round_up(max(int(math.ceil(occ * occupancy_safety)), 2 * k + 2),
+                    128)
+    return GridSpec(n_points=n_points or n, k=k, resolution=res,
+                    neigh_cap=min(cap, n_points or n))
+
+
+def _cells(points, valid, spec: GridSpec):
+    """Per-point integer cell coords + flat cell ids (n_cells = sentinel)."""
+    res = jnp.asarray(spec.resolution, jnp.int32)
+    big = jnp.float32(3.4e38)
+    pts = points.astype(jnp.float32)
+    v = valid[:, None]
+    lo = jnp.min(jnp.where(v, pts, big), axis=0)
+    hi = jnp.max(jnp.where(v, pts, -big), axis=0)
+    extent = jnp.maximum(hi - lo, 1e-6)
+    cc = jnp.floor((pts - lo) / extent * res).astype(jnp.int32)
+    cc = jnp.clip(cc, 0, res - 1)
+    cid = _flat_cid(cc, spec)
+    cid = jnp.where(valid, cid, spec.n_cells)
+    return cc, cid
+
+
+def _flat_cid(cc, spec: GridSpec):
+    _, ry, rz = spec.resolution
+    return (cc[..., 0] * ry + cc[..., 1]) * rz + cc[..., 2]
+
+
+def build_table(points, n_valid, spec: GridSpec):
+    """Compacted neighborhood table: (n_cells, neigh_cap) point ids, -1 empty.
+
+    One stable sort by cell id orders points; per-(cell, offset) exclusive
+    prefix sums assign each point a slot in the neighborhood rows of its 27
+    surrounding cells; a single scatter (mode='drop' culls out-of-range
+    neighbors, padded points, and capacity overflow) fills the table.
+
+    Returns (table, cid (N,) per-point cell id, valid (N,) bool).
+    """
+    n = spec.n_points
+    rx, ry, rz = spec.resolution
+    res = jnp.asarray(spec.resolution, jnp.int32)
+    valid = jnp.arange(n) < n_valid
+    cc, cid = _cells(points, valid, spec)
+
+    order = jnp.argsort(cid)                      # stable: sentinel rows last
+    sorted_cid = cid[order]
+    starts = jnp.searchsorted(sorted_cid, jnp.arange(spec.n_cells + 1))
+    counts = jnp.diff(starts)                     # (n_cells,)
+    rank = jnp.arange(n) - starts[jnp.clip(sorted_cid, 0, spec.n_cells - 1)]
+
+    # per-cell neighborhood layout: slot base of offset j in cell c's row is
+    # the exclusive prefix sum of the 27 neighbor-cell occupancies
+    cell_ids = jnp.arange(spec.n_cells, dtype=jnp.int32)
+    cell_cc = jnp.stack([cell_ids // (ry * rz),
+                         (cell_ids // rz) % ry,
+                         cell_ids % rz], axis=-1)             # (n_cells, 3)
+    nbr_cc = cell_cc[:, None, :] + jnp.asarray(_OFFSETS)[None]
+    nbr_ok = jnp.all((nbr_cc >= 0) & (nbr_cc < res), axis=-1)  # (n_cells, 27)
+    nbr_cid = _flat_cid(jnp.clip(nbr_cc, 0, res - 1), spec)
+    nbr_counts = jnp.where(nbr_ok, counts[nbr_cid], 0)
+    base = jnp.cumsum(nbr_counts, axis=1) - nbr_counts         # (n_cells, 27)
+
+    # scatter side: sorted point i (cell c_p, rank m) occupies slot
+    # base[c', j] + m of every cell c' = c_p - offset_j it neighbors
+    sorted_cc = jnp.clip(cc[order], 0, res - 1)
+    home_cc = sorted_cc[:, None, :] - jnp.asarray(_OFFSETS)[None]  # (N, 27, 3)
+    home_ok = jnp.all((home_cc >= 0) & (home_cc < res), axis=-1)
+    home_ok &= (sorted_cid < spec.n_cells)[:, None]
+    home_cid = _flat_cid(jnp.clip(home_cc, 0, res - 1), spec)
+    j_ids = jnp.arange(27, dtype=jnp.int32)[None, :]
+    col = base[home_cid, j_ids] + rank[:, None]
+    row = jnp.where(home_ok, home_cid, spec.n_cells)    # OOB row -> dropped
+    table = jnp.full((spec.n_cells, spec.neigh_cap), -1, jnp.int32)
+    table = table.at[row, col].set(
+        jnp.broadcast_to(order.astype(jnp.int32)[:, None], (n, 27)),
+        mode="drop")
+    return table, cid, valid
+
+
+def candidate_lists(points, n_valid, spec: GridSpec):
+    """Fixed-size per-query candidate ids (the query cell's neighborhood row).
+
+    Returns (cand_idx (N, C) i32 safe-valued, cand_valid (N, C) bool,
+    valid (N,) bool query mask)."""
+    table, cid, valid = build_table(points, n_valid, spec)
+    cand = table[jnp.clip(cid, 0, spec.n_cells - 1)]   # (N, C)
+    self_ids = jnp.arange(spec.n_points, dtype=jnp.int32)[:, None]
+    cand_valid = (cand >= 0) & (cand != self_ids) & valid[:, None]
+    return jnp.maximum(cand, 0), cand_valid, valid
+
+
+def knn(points, n_valid, spec: GridSpec, *, impl: str = "xla",
+        interpret: bool = True):
+    """Fixed-degree kNN: (N, 3) points -> ((N, k) idx, (N, k) d2, (N, k) mask).
+
+    ``n_valid`` is a (traced) scalar: points[n_valid:] are padding and are
+    neither queried nor returned as neighbors. Missing neighbors (sparse
+    clouds, padding rows) have idx -1 and mask False.
+    """
+    assert points.shape[0] == spec.n_points, (points.shape, spec.n_points)
+    cand_idx, cand_valid, valid = candidate_lists(points, n_valid, spec)
+    cand_pos = points.astype(jnp.float32)[cand_idx]
+    idx, d2, mask = knn_ops.topk_neighbors(
+        points.astype(jnp.float32), cand_pos, cand_idx, cand_valid,
+        spec.k, impl=impl, interpret=interpret)
+    mask = mask & valid[:, None]
+    idx = jnp.where(mask, idx, -1)
+    return idx, d2, mask
+
+
+def symmetric_edges(nbr_idx, nbr_mask) -> Tuple[jnp.ndarray, jnp.ndarray,
+                                                jnp.ndarray]:
+    """Fixed-shape symmetric closure of (n, k) neighbor lists.
+
+    Emits the forward edges (nbr -> self, one per neighbor slot) plus the
+    reverse edges, masking reverse edges that duplicate an existing forward
+    edge (mutual pairs) — the device equivalent of the host
+    ``knn_edges(bidirectional=True)`` unique() pass, with static shape 2nk.
+
+    Returns (senders (2nk,) i32, receivers (2nk,) i32, edge_mask (2nk,) bool);
+    masked slots have senders = receivers = 0.
+    """
+    n, k = nbr_idx.shape
+    rec = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[:, None], (n, k))
+    t = jnp.maximum(nbr_idx, 0)
+    # reverse edge (i -> t) duplicates a forward edge iff i in nbr[t]
+    dup = jnp.any((nbr_idx[t] == rec[:, :, None]) & nbr_mask[t], axis=-1)
+    rev_mask = nbr_mask & ~dup
+    senders = jnp.concatenate([nbr_idx.reshape(-1), rec.reshape(-1)])
+    receivers = jnp.concatenate([rec.reshape(-1), nbr_idx.reshape(-1)])
+    emask = jnp.concatenate([nbr_mask.reshape(-1), rev_mask.reshape(-1)])
+    senders = jnp.where(emask, senders, 0).astype(jnp.int32)
+    receivers = jnp.where(emask, receivers, 0).astype(jnp.int32)
+    return senders, receivers, emask
+
+
+# ---------------------------------------------------------------- diagnostics
+
+def _cell_counts_grid(pts: np.ndarray, res) -> np.ndarray:
+    res = np.asarray(res)
+    lo, hi = pts.min(0), pts.max(0)
+    extent = np.maximum(hi - lo, 1e-6)
+    cc = np.clip(np.floor((pts - lo) / extent * res).astype(np.int64),
+                 0, res - 1)
+    cid = (cc[:, 0] * res[1] + cc[:, 1]) * res[2] + cc[:, 2]
+    return np.bincount(cid, minlength=int(np.prod(res))).reshape(tuple(res))
+
+
+def _neighborhood_counts(pts: np.ndarray, res) -> np.ndarray:
+    """Per-cell occupancy of the 3x3x3 neighborhood (3D box sum)."""
+    grid = _cell_counts_grid(pts, res)
+    for ax in range(3):
+        pad = [(0, 0)] * 3
+        pad[ax] = (1, 1)
+        padded = np.pad(grid, pad)
+        idx = np.arange(grid.shape[ax])
+        grid = (np.take(padded, idx, axis=ax)
+                + np.take(padded, idx + 1, axis=ax)
+                + np.take(padded, idx + 2, axis=ax))
+    return grid
+
+
+def overflow_count(points: np.ndarray, n_valid: int, spec: GridSpec) -> int:
+    """Host-side: candidate slots lost to neighborhood-capacity overflow."""
+    nc = _neighborhood_counts(np.asarray(points)[:n_valid], spec.resolution)
+    return int(np.maximum(nc - spec.neigh_cap, 0).sum())
+
+
+def max_knn_cell_ratio(points: np.ndarray, n_valid: int,
+                       spec: GridSpec) -> float:
+    """Host-side: max over points of (k-th NN distance / narrowest cell width).
+
+    <= 1.0 guarantees the 27-cell window contains the true kNN (exactness,
+    given no overflow). Uses cKDTree — diagnostics only, never the hot path.
+    """
+    from scipy.spatial import cKDTree
+    pts = np.asarray(points)[:n_valid]
+    dist, _ = cKDTree(pts).query(pts, k=min(spec.k + 1, len(pts)))
+    kth = dist[:, -1]
+    widths = np.maximum(pts.max(0) - pts.min(0), 1e-6) / \
+        np.asarray(spec.resolution)
+    return float(kth.max() / max(widths.min(), 1e-12))

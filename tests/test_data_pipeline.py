@@ -1,0 +1,85 @@
+"""Data pipeline regressions: IDW target path and test-split bookkeeping."""
+import numpy as np
+import pytest
+
+from repro.configs.base import GNNConfig
+from repro.core.graph_build import triangle_normals, vertex_normals
+from repro.data import geometry as geo
+from repro.data import pipeline as pipe
+
+
+def _cfg():
+    return GNNConfig().reduced().replace(levels=(64, 128, 256))
+
+
+def test_vertex_normals_unit_and_aligned():
+    verts, faces = geo.car_surface(geo.sample_params(0))
+    vn = vertex_normals(verts, faces)
+    assert vn.shape == verts.shape
+    np.testing.assert_allclose(np.linalg.norm(vn, axis=1), 1.0, rtol=1e-5)
+    # same orientation convention as the face normals sample_surface uses:
+    # each vertex normal agrees with (nearly) every incident face normal
+    fn = triangle_normals(verts, faces)
+    agree = np.sum(vn[faces] * fn[:, None, :], axis=-1)   # (F, 3 corners)
+    assert (agree > 0).mean() > 0.97
+
+
+def test_idw_targets_interpolate_mesh_fields():
+    """The IDW path evaluates fields on mesh vertices (true vertex normals)
+    and interpolates onto the cloud — close to the direct analytic targets,
+    not a degenerate self-interpolation artifact."""
+    cfg = _cfg()
+    s_direct = pipe.build_sample(cfg, 0, use_idw=False)
+    s_idw = pipe.build_sample(cfg, 0, use_idw=True)
+    assert s_idw.targets.shape == s_direct.targets.shape
+    assert np.isfinite(s_idw.targets).all()
+    # IDW smooths, so demand correlation rather than equality
+    cp_d, cp_i = s_direct.targets[:, 0], s_idw.targets[:, 0]
+    corr = np.corrcoef(cp_d, cp_i)[0, 1]
+    assert corr > 0.9, corr
+    # and it must differ from the direct path (vertex-field provenance)
+    assert not np.allclose(cp_d, cp_i)
+
+
+def test_idw_interpolate_exact_on_sources():
+    rng = np.random.default_rng(0)
+    src = rng.random((50, 3)).astype(np.float32)
+    vals = rng.random((50, 2)).astype(np.float32)
+    out = pipe.idw_interpolate(src, vals, src, k=5)
+    np.testing.assert_allclose(out, vals, atol=1e-5)
+
+
+@pytest.mark.parametrize("n,frac", [(5, 0.1), (8, 0.25), (10, 0.1),
+                                    (10, 0.3), (30, 0.1), (50, 0.2),
+                                    (7, 1.0), (2, 0.5), (1, 0.1)])
+def test_split_test_ids_disjoint_and_exact(n, frac):
+    rng = np.random.default_rng(n)
+    drags = rng.normal(size=n)
+    ood, iid = pipe.split_test_ids(drags, test_frac=frac)
+    n_test = min(max(1, int(round(frac * n))), n)
+    assert len(set(ood) & set(iid)) == 0
+    assert len(ood) + len(iid) == n_test
+    assert len(set(ood)) == len(ood) and len(set(iid)) == len(iid)
+    assert all(0 <= i < n for i in ood + iid)
+    if n_test >= 2:
+        # OOD ids sit at the drag extremes
+        order = np.argsort(drags)
+        n_ood = len(ood)
+        extremes = set(order[:(n_ood + 1) // 2].tolist()) | \
+            set(order[n - n_ood // 2:].tolist())
+        assert set(ood) == {int(i) for i in extremes}
+
+
+def test_build_dataset_split_sizes():
+    cfg = _cfg()
+    n = 8
+    train, test, norm_in, norm_out = pipe.build_dataset(cfg, n,
+                                                        test_frac=0.25)
+    assert len(train) + len(test) == n
+    assert len(test) == max(1, int(round(0.25 * n)))
+    train_ids = {s.sample_id for s in train}
+    test_ids = {s.sample_id for s in test}
+    assert not train_ids & test_ids
+    # normalizers fit over all samples: encoding train features is ~N(0,1)
+    enc = norm_in.encode(np.concatenate([s.node_feats for s in train]))
+    assert abs(float(enc.mean())) < 0.5

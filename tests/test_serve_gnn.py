@@ -1,0 +1,101 @@
+"""GNN serving driver: padding buckets, microbatching, request bookkeeping."""
+import numpy as np
+
+from repro.configs.base import GNNConfig
+from repro.data import geometry as geo
+from repro.launch.serve_gnn import GNNServer, _level_sizes
+
+
+def _cfg():
+    return GNNConfig().reduced().replace(levels=(64, 128, 256))
+
+
+def test_level_sizes_nested():
+    assert _level_sizes(1024, 3) == (256, 512, 1024)
+    assert _level_sizes(512, 1) == (512,)
+
+
+def test_serve_three_geometries_through_buckets():
+    """3 geometries of different sizes route through 2 padding buckets and
+    come back with finite fields of the right shape."""
+    server = GNNServer(_cfg(), (128, 256), max_batch=2, seed=0)
+    reqs = []
+    for i, n_req in [(0, 100), (1, 128), (2, 200)]:
+        verts, faces = geo.car_surface(geo.sample_params(i))
+        reqs.append((verts, faces, n_req))
+    results = server.serve(reqs)
+    assert len(results) == 3
+    by_id = {r.request_id: r for r in results}
+    assert by_id[0].bucket == 128 and by_id[1].bucket == 128
+    assert by_id[2].bucket == 256
+    for r in results:
+        assert r.fields.shape == (r.bucket, 4)
+        assert np.isfinite(r.fields).all()
+        assert r.points.shape == (r.bucket, 3)
+        assert r.latency_s >= 0.0
+    rep = server.stats.report()
+    assert rep["requests"] == 3
+    assert rep["p95_ms"] >= rep["p50_ms"] >= 0.0
+
+
+def test_bucket_routing_edges():
+    server = GNNServer(_cfg(), (128, 256), max_batch=2)
+    assert server.bucket_for(None) == 256       # default: finest bucket
+    assert server.bucket_for(1) == 128
+    assert server.bucket_for(129) == 256
+    assert server.bucket_for(10_000) == 256     # oversized -> largest
+
+
+def test_microbatching_caps_batch_size():
+    server = GNNServer(_cfg(), (128,), max_batch=2)
+    verts, faces = geo.car_surface(geo.sample_params(0))
+    for _ in range(5):
+        server.submit(verts, faces, 128)
+    assert server.pending() == 5
+    results = server.flush()
+    assert server.pending() == 0
+    assert len(results) == 5
+    assert max(r.batch_size for r in results) <= 2
+    assert server.stats.batch_sizes == [2, 2, 1]
+
+
+def test_ood_geometry_overflow_warns():
+    """A geometry far denser than the calibration reference trips the
+    per-request overflow guard instead of failing silently."""
+    import warnings as w
+    # bucket large enough that the calibrated neigh_cap sits below the
+    # point count (at tiny buckets the cap clamps to n and cannot overflow)
+    server = GNNServer(_cfg(), (512,), max_batch=1)
+    # 90% of the surface area in a small triangle, with a distant second
+    # triangle stretching the bounding box: most sampled points collapse
+    # into one grid cell, far denser than the calibration reference
+    verts = np.array([[0, 0, 0], [0.3, 0, 0], [0, 0.3, 1e-3],
+                      [100, 100, 100], [100.1, 100, 100],
+                      [100, 100.1, 100.001]], np.float32)
+    faces = np.array([[0, 1, 2], [3, 4, 5]])
+    with w.catch_warnings(record=True) as caught:
+        w.simplefilter("always")
+        [res] = server.serve([(verts, faces, 512)])
+    assert server.stats.overflow_requests == 1
+    assert any("overflows" in str(c.message) for c in caught)
+    assert np.isfinite(res.fields).all()   # still serves, just flagged
+
+
+def test_custom_reference_geometry():
+    verts, faces = geo.car_surface(geo.sample_params(5))
+    server = GNNServer(_cfg(), (128,), max_batch=1,
+                       reference=(verts, faces))
+    [res] = server.serve([(verts, faces, 128)])
+    assert np.isfinite(res.fields).all()
+    assert server.stats.overflow_requests == 0
+
+
+def test_deterministic_across_flushes():
+    """Same geometry, same server rng state -> identical predictions."""
+    verts, faces = geo.car_surface(geo.sample_params(3))
+    outs = []
+    for _ in range(2):
+        server = GNNServer(_cfg(), (128,), max_batch=1, seed=7)
+        [res] = server.serve([(verts, faces, 128)])
+        outs.append(res.fields)
+    np.testing.assert_allclose(outs[0], outs[1], atol=1e-6)
