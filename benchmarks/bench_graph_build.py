@@ -1,24 +1,36 @@
 """Host (cKDTree) vs device (hash-grid) graph construction + serving latency.
 
-Three comparisons, all with identical output semantics (same neighbor sets,
-same deduped symmetric edge sets):
+Comparisons, all with identical output semantics (same neighbor sets, same
+deduped symmetric edge sets):
 
   knn        host ``knn_edges`` (cKDTree build + query + unique dedup)
-             vs jitted hash-grid kNN + symmetric closure (warm per-size
-             jit cache — the steady-state serving regime).
+             vs jitted hash-grid kNN + symmetric closure, in both grid
+             layouts: the occupied-cell ``csr`` default (O(points) memory)
+             and the ``dense`` per-cell reference table (O(cells)).
+             Emits per-size dense-vs-CSR build time, the analytic
+             neighborhood-structure memory of each layout, and an explicit
+             neighbor-set parity check between the layouts.
   multiscale host ``multiscale_edges`` union vs the device multi-scale
              edge builder.
   serve      end-to-end request latency through ``GNNServer`` (graph build
              + featurization + model forward inside one XLA program).
 
-Usage:
-  PYTHONPATH=src python benchmarks/bench_graph_build.py [--smoke]
+``--paper-scale`` additionally builds and queries a 2M-point bucket under
+the CSR layout (the paper's finest level) — the dense table at that spec is
+reported analytically, not allocated (it would not fit).
 
-Emits CSV rows: name,us,derived (matching benchmarks/run.py conventions).
+Usage:
+  PYTHONPATH=src python benchmarks/bench_graph_build.py \
+      [--smoke] [--paper-scale] [--json BENCH_graph_build.json]
+
+Emits CSV rows: name,us,derived (matching benchmarks/run.py conventions);
+``--json`` records the dense-vs-CSR numbers in machine-readable form.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import resource
 
 import jax
 import jax.numpy as jnp
@@ -41,28 +53,97 @@ def _cloud(n: int, seed: int = 0):
     return sample_surface(verts, faces, n, np.random.default_rng(seed))
 
 
-def bench_knn(sizes, k: int, rows):
+def _table_mib(spec: hashgrid.GridSpec) -> float:
+    """Analytic neighborhood-structure memory of a layout (int32 entries).
+
+    dense: the (n_cells, neigh_cap) table. csr: the per-query 27 segment
+    [start, end) bounds — nothing scales with the cell count. The (N, C)
+    candidate row is materialized identically by both layouts and excluded.
+    """
+    if spec.layout == "dense":
+        return spec.n_cells * spec.neigh_cap * 4 / 2 ** 20
+    return spec.n_points * 27 * 2 * 4 / 2 ** 20
+
+
+def _neighbor_sets(idx, mask):
+    return [frozenset(row[m].tolist()) for row, m in zip(np.asarray(idx),
+                                                         np.asarray(mask))]
+
+
+def bench_knn(sizes, k: int, rows, report):
     for n in sizes:
         pts, _ = _cloud(n)
-        spec = hashgrid.calibrate_spec(pts, k)
 
         def host():
             return knn_edges(pts, k)
 
-        @jax.jit
-        def device(p):
-            idx, _, mask = hashgrid.knn(p, n, spec)
-            return hashgrid.symmetric_edges(idx, mask)
-
         jp = jnp.asarray(pts)
         t_host = timeit(lambda: jax.block_until_ready(
             jnp.asarray(host()[0])))          # include the H2D transfer
-        t_dev = timeit(device, jp)
-        ratio = hashgrid.max_knn_cell_ratio(pts, n, spec)
         rows.append((f"knn_host_n{n}", t_host, f"k={k}"))
-        rows.append((f"knn_device_n{n}", t_dev,
-                     f"k={k} C={spec.neigh_cap} exact={ratio <= 1.0} "
-                     f"speedup={t_host / t_dev:.2f}x"))
+        entry = {"host_us": t_host}
+
+        sets = {}
+        for layout in ("csr", "dense"):
+            spec = hashgrid.calibrate_spec(pts, k, layout=layout)
+
+            @jax.jit
+            def device(p, spec=spec):
+                idx, _, mask = hashgrid.knn(p, n, spec)
+                return hashgrid.symmetric_edges(idx, mask)
+
+            t_dev = timeit(device, jp)
+            ratio = hashgrid.max_knn_cell_ratio(pts, n, spec)
+            mib = _table_mib(spec)
+            rows.append((f"knn_{layout}_n{n}", t_dev,
+                         f"k={k} C={spec.neigh_cap} cells={spec.n_cells} "
+                         f"table_mib={mib:.2f} exact={ratio <= 1.0} "
+                         f"speedup={t_host / t_dev:.2f}x"))
+            entry[layout] = {"us": t_dev, "table_mib": mib,
+                             "n_cells": spec.n_cells,
+                             "neigh_cap": spec.neigh_cap,
+                             "exact": bool(ratio <= 1.0)}
+            idx, _, mask = hashgrid.knn(jp, n, spec)
+            sets[layout] = _neighbor_sets(idx, mask)
+
+        parity = sets["csr"] == sets["dense"]
+        entry["parity"] = bool(parity)
+        rows.append((f"knn_parity_n{n}", 0.0,
+                     f"csr_vs_dense_neighbor_sets_equal={parity}"))
+        if not parity:
+            raise AssertionError(f"dense/CSR neighbor sets diverge at n={n}")
+        report["sizes"][str(n)] = entry
+
+
+def bench_paper_scale(k: int, rows, report, n: int = 2_000_000):
+    """The acceptance check for the CSR layout: a paper-scale 2M-point
+    bucket is constructible on one host. Dense is reported, not allocated."""
+    pts, _ = _cloud(n)
+    spec = hashgrid.calibrate_spec(pts, k, layout="csr")
+    dense_spec = hashgrid.GridSpec(n_points=n, k=k,
+                                   resolution=spec.resolution,
+                                   neigh_cap=spec.neigh_cap, layout="dense")
+
+    @jax.jit
+    def device(p):
+        idx, _, mask = hashgrid.knn(p, n, spec)
+        return hashgrid.symmetric_edges(idx, mask)
+
+    t_dev = timeit(device, jnp.asarray(pts), warmup=1, iters=2)
+    ratio = hashgrid.max_knn_cell_ratio(pts, n, spec)
+    peak_rss_mib = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024
+    rows.append((f"knn_csr_n{n}", t_dev,
+                 f"k={k} C={spec.neigh_cap} cells={spec.n_cells} "
+                 f"csr_table_mib={_table_mib(spec):.1f} "
+                 f"dense_would_be_mib={_table_mib(dense_spec):.1f} "
+                 f"exact={ratio <= 1.0} peak_rss_mib={peak_rss_mib:.0f}"))
+    report["paper_scale"] = {
+        "n_points": n, "us": t_dev, "exact": bool(ratio <= 1.0),
+        "n_cells": spec.n_cells, "neigh_cap": spec.neigh_cap,
+        "csr_table_mib": _table_mib(spec),
+        "dense_table_mib_not_allocated": _table_mib(dense_spec),
+        "peak_rss_mib": peak_rss_mib,
+    }
 
 
 def bench_multiscale(sizes, k: int, rows):
@@ -109,15 +190,28 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="small sizes for CI (seconds, not minutes)")
+    ap.add_argument("--paper-scale", action="store_true",
+                    help="also build+query a 2M-point CSR bucket")
+    ap.add_argument("--json", default=None,
+                    help="write dense-vs-CSR numbers to this JSON file")
     ap.add_argument("--k", type=int, default=6)
     args = ap.parse_args()
 
     sizes = [2048, 4096] if args.smoke else [4096, 16384, 32768]
     rows = []
-    bench_knn(sizes, args.k, rows)
+    report = {"k": args.k, "sizes": {}}
+    bench_knn(sizes, args.k, rows, report)
     bench_multiscale(sizes[:2] if args.smoke else sizes[:-1], args.k, rows)
     bench_serve(512 if args.smoke else 2048, 4 if args.smoke else 8, rows)
+    if args.paper_scale:
+        bench_paper_scale(args.k, rows, report)
+    report["peak_rss_mib"] = \
+        resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024
     emit(rows)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+        print(f"wrote {args.json}")
 
 
 if __name__ == "__main__":

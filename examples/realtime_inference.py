@@ -7,9 +7,17 @@ graph work in the steady state**: after the one-time bucket calibration and
 compile, every request is surface sampling (numpy) + one jitted XLA call
 that builds the multi-scale graph on device and runs the GNN.
 
+With ``--shard-devices P`` each request is instead split across P devices
+(RCB partitions + halo rings under shard_map, see README "Sharded
+serving") — the paper-scale mode, exactly equivalent to single-device
+output on every owned point.
+
 Run:
   PYTHONPATH=src python examples/realtime_inference.py
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      PYTHONPATH=src python examples/realtime_inference.py --shard-devices 8
 """
+import argparse
 import time
 
 import numpy as np
@@ -22,12 +30,21 @@ N_POINTS = 1024      # bucket resolution (the paper serves 2M on 8xH100)
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--shard-devices", type=int, default=1,
+                    help="split each request across this many jax devices")
+    args = ap.parse_args()
+
     cfg = GNNConfig().reduced()
-    server = GNNServer(cfg, (N_POINTS,), max_batch=2)
+    server = GNNServer(cfg, (N_POINTS,), max_batch=2,
+                       shard_devices=args.shard_devices)
+    mode = (f"sharded x{args.shard_devices}" if args.shard_devices > 1
+            else "single-device")
 
     t0 = time.perf_counter()
     server.warmup()     # one compile per bucket; amortized over all requests
-    print(f"compile+calibrate: {time.perf_counter() - t0:.1f}s (one-time)")
+    print(f"compile+calibrate [{mode}]: "
+          f"{time.perf_counter() - t0:.1f}s (one-time)")
 
     for i in range(4):
         verts, faces = geo.car_surface(geo.sample_params(i))  # "read an STL"

@@ -35,6 +35,7 @@ class Partition:
     receivers: np.ndarray         # (e_local,) int32 local receiver ids
     edge_ids: np.ndarray          # (e_local,) int64 indices into global edges
     part_id: int = 0
+    hop_of: np.ndarray | None = None  # (n_local,) int32 hop distance to owned
 
     @property
     def n_nodes(self) -> int:
@@ -92,6 +93,7 @@ def build_partition(senders: np.ndarray, receivers: np.ndarray,
         receivers=g2l[receivers[edge_ids]].astype(np.int32),
         edge_ids=edge_ids.astype(np.int64),
         part_id=part_id,
+        hop_of=hop_of[global_nodes].astype(np.int32),
     )
 
 
@@ -145,12 +147,79 @@ def pad_partitions(parts: Sequence[Partition],
     return out
 
 
+# hop value of padding slots in point-shard exports: larger than any real
+# hop distance, so every "hop <= h" mask excludes padding
+HOP_PAD = np.int32(2 ** 30)
+
+
+def pack_point_shards(ids: Sequence[np.ndarray], hops: Sequence[np.ndarray],
+                      owned: Sequence[np.ndarray],
+                      pad_nodes: int | None = None) -> dict:
+    """Pad per-shard (global id, hop, owned) membership lists and stack.
+
+    The node-centric sibling of ``pad_partitions``: the sharded serving path
+    (``repro.graphx.sharded``) rebuilds each shard's graph on-device from
+    its point buffer, so only membership is exported. Ids must be sorted
+    ascending per shard (keeps nested multi-scale level membership a prefix
+    of the local buffer).
+
+    Returns dict of numpy arrays:
+      global_ids (P, Nmax) int64   (padding slots = 0, masked)
+      hop        (P, Nmax) int32   (padding slots = HOP_PAD)
+      node_mask  (P, Nmax) bool    True for real member nodes
+      owned      (P, Nmax) bool    True for owned nodes
+      n_local    (P,)      int32   member count per shard
+    """
+    P = len(ids)
+    nmax = pad_nodes or max(max((len(i) for i in ids), default=1), 1)
+    out = {
+        "global_ids": np.zeros((P, nmax), np.int64),
+        "hop": np.full((P, nmax), HOP_PAD, np.int32),
+        "node_mask": np.zeros((P, nmax), bool),
+        "owned": np.zeros((P, nmax), bool),
+        "n_local": np.zeros((P,), np.int32),
+    }
+    for i, (gid, hop, own) in enumerate(zip(ids, hops, owned)):
+        m = len(gid)
+        if m > nmax:
+            raise ValueError(f"pad size {nmax} smaller than shard {i} "
+                             f"({m} nodes)")
+        out["global_ids"][i, :m] = gid
+        out["hop"][i, :m] = hop
+        out["node_mask"][i, :m] = True
+        out["owned"][i, :m] = own
+        out["n_local"][i] = m
+    return out
+
+
+def export_point_shards(parts: Sequence[Partition],
+                        pad_nodes: int | None = None) -> dict:
+    """Device-friendly padded export of partition *node membership*
+    (see ``pack_point_shards`` for the layout), sorted by global id."""
+    if not parts:
+        raise ValueError("export_point_shards needs at least one partition")
+    if any(p.hop_of is None for p in parts):
+        raise ValueError("partitions lack hop_of (rebuild with "
+                         "build_partition from this version)")
+    ids, hops, owned = [], [], []
+    for p in parts:
+        order = np.argsort(p.global_nodes, kind="stable")
+        ids.append(p.global_nodes[order])
+        hops.append(p.hop_of[order])
+        owned.append(p.hop_of[order] == 0)
+    return pack_point_shards(ids, hops, owned, pad_nodes)
+
+
 def halo_overhead(parts: Sequence[Partition], n_nodes: int) -> dict:
-    """Paper SV-F: halo regions add memory/compute overhead; quantify it."""
+    """Paper SV-F: halo regions add memory/compute overhead; quantify it.
+
+    Degenerate-safe: no partitions, empty partitions, and n_parts=1 (no halo
+    at all) report finite numbers instead of raising.
+    """
     total_local = sum(p.n_nodes for p in parts)
     return {
         "replication_factor": total_local / max(n_nodes, 1),
         "halo_fraction": 1.0 - sum(p.n_owned for p in parts) / max(total_local, 1),
-        "max_nodes": max(p.n_nodes for p in parts),
-        "max_edges": max(p.n_edges for p in parts),
+        "max_nodes": max((p.n_nodes for p in parts), default=0),
+        "max_edges": max((p.n_edges for p in parts), default=0),
     }

@@ -148,9 +148,18 @@ def partition(senders: np.ndarray, receivers: np.ndarray, n_nodes: int,
 
 
 def balance_stats(labels: np.ndarray, n_parts: int) -> dict:
-    counts = np.bincount(labels, minlength=n_parts).astype(np.float64)
+    """Node-count balance of a labeling.
+
+    Degenerate-safe: n_parts=1 reports imbalance 1.0; empty labelings and
+    empty partitions report finite numbers instead of dividing by zero.
+    """
+    labels = np.asarray(labels)
+    n_parts = max(int(n_parts), 1)
+    counts = np.bincount(labels, minlength=n_parts).astype(np.float64) \
+        if labels.size else np.zeros(n_parts)
+    mean = counts.mean()
     return {
         "min": int(counts.min()),
         "max": int(counts.max()),
-        "imbalance": float(counts.max() / counts.mean()),
+        "imbalance": float(counts.max() / mean) if mean > 0 else 1.0,
     }

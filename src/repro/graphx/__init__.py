@@ -12,4 +12,7 @@ from repro.graphx.hashgrid import (GridSpec, auto_spec, knn,  # noqa: F401
 from repro.graphx.multiscale import (MultiscaleSpec,  # noqa: F401
                                      auto_multiscale_spec, multiscale_edges)
 from repro.graphx.pipeline import (make_batched_infer_fn,  # noqa: F401
-                                   make_infer_fn)
+                                   make_graph_forward, make_infer_fn)
+from repro.graphx.sharded import (ShardPlan, ShardSpec,  # noqa: F401
+                                  build_shard_spec, global_halo_width,
+                                  make_sharded_infer_fn, plan_shards)

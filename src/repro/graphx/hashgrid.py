@@ -22,10 +22,15 @@ within one cell width on every axis and no cell neighborhood overflows
 at setup time (one host cKDTree query — never in the hot path);
 ``overflow_count`` and ``max_knn_cell_ratio`` are the matching diagnostics.
 
-Memory: the neighborhood table is dense over the grid, so ``calibrate_spec``
-bounds the cell count at ``cell_budget * n_points`` (surface clouds occupy
-only O(R^2) of R^3 cells; a compacted occupied-cell CSR layout that removes
-this bound is a ROADMAP item for paper-scale 2M-point serving).
+Layouts: the default ``layout='csr'`` never materializes anything over the
+grid — points are sorted by cell id once and each query's candidate row is
+assembled by 27 binary searches into that order (an occupied-cell CSR view),
+so memory is O(n_points * neigh_cap) regardless of resolution and
+paper-scale 2M-point buckets are constructible on one host. The original
+``layout='dense'`` per-cell neighborhood table is kept as a reference
+implementation (its memory is O(n_cells * neigh_cap), so ``calibrate_spec``
+bounds its cell count at ``cell_budget * n_points``); both layouts produce
+identical neighbor sets, which the tests enforce.
 """
 from __future__ import annotations
 
@@ -37,6 +42,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.knn import ops as knn_ops
+
+# CSR cell ids must stay addressable in int32 (jax default int). The grid is
+# purely arithmetic under CSR — no O(n_cells) array exists — so this is the
+# only resolution bound.
+_MAX_INT32_CELLS = 2 ** 31 - 64
 
 _OFFSETS = np.array([(dx, dy, dz)
                      for dx in (-1, 0, 1)
@@ -51,6 +61,7 @@ class GridSpec:
     k: int                            # neighbors per query
     resolution: Tuple[int, int, int]  # cells per axis (rx, ry, rz)
     neigh_cap: int                    # candidate capacity per cell nbhd (C)
+    layout: str = "csr"               # 'csr' (occupied-cell) | 'dense' table
 
     @property
     def n_cells(self) -> int:
@@ -68,7 +79,7 @@ def _round_up(x: int, m: int) -> int:
 
 def auto_spec(n_points: int, k: int = 6, mode: str = "surface",
               resolution: int | Tuple[int, int, int] | None = None,
-              neigh_cap: int | None = None) -> GridSpec:
+              neigh_cap: int | None = None, layout: str = "csr") -> GridSpec:
     """Heuristic spec for roughly isotropic uniform point clouds.
 
     ``mode='surface'``: points on a 2-manifold — occupied cells scale like
@@ -97,13 +108,13 @@ def auto_spec(n_points: int, k: int = 6, mode: str = "surface",
                               128)
         neigh_cap = min(neigh_cap, n_points)
     return GridSpec(n_points=n_points, k=k, resolution=tuple(resolution),
-                    neigh_cap=neigh_cap)
+                    neigh_cap=neigh_cap, layout=layout)
 
 
 def calibrate_spec(points: np.ndarray, k: int, n_points: int | None = None,
                    cell_safety: float = 1.3,
                    occupancy_safety: float = 1.5,
-                   cell_budget: float = 8.0) -> GridSpec:
+                   cell_budget: float = 8.0, layout: str = "csr") -> GridSpec:
     """Measure a reference cloud and return an exact-by-construction spec.
 
     Host-side, setup-time only (one cKDTree query). The cell size is set to
@@ -120,11 +131,14 @@ def calibrate_spec(points: np.ndarray, k: int, n_points: int | None = None,
     extent = np.maximum(pts.max(0) - pts.min(0), 1e-6)
     cell = max(kth * cell_safety, 1e-6)
     res = tuple(int(max(1, math.floor(e / cell))) for e in extent)
-    # the table is dense over the grid, so bound total cells by
-    # cell_budget * n: growing the cells only loosens the kNN window
-    # (exactness is preserved), at the price of a larger neigh_cap
+    # dense: the table is O(n_cells), so bound total cells by
+    # cell_budget * n. csr: nothing is materialized over the grid; only the
+    # int32 cell-id range bounds the resolution. Growing the cells only
+    # loosens the kNN window (exactness is preserved), at the price of a
+    # larger neigh_cap.
     n_cells = res[0] * res[1] * res[2]
-    max_cells = max(int(cell_budget * n), 27)
+    max_cells = (max(int(cell_budget * n), 27) if layout == "dense"
+                 else _MAX_INT32_CELLS)
     if n_cells > max_cells:
         shrink = (max_cells / n_cells) ** (1.0 / 3.0)
         res = tuple(int(max(1, math.floor(r * shrink))) for r in res)
@@ -132,7 +146,7 @@ def calibrate_spec(points: np.ndarray, k: int, n_points: int | None = None,
     cap = _round_up(max(int(math.ceil(occ * occupancy_safety)), 2 * k + 2),
                     128)
     return GridSpec(n_points=n_points or n, k=k, resolution=res,
-                    neigh_cap=min(cap, n_points or n))
+                    neigh_cap=min(cap, n_points or n), layout=layout)
 
 
 def _cells(points, valid, spec: GridSpec):
@@ -207,11 +221,76 @@ def build_table(points, n_valid, spec: GridSpec):
     return table, cid, valid
 
 
+_XY_OFFSETS = np.array([(dx, dy) for dx in (-1, 0, 1) for dy in (-1, 0, 1)],
+                       np.int32)                               # (9, 2)
+
+
+def csr_candidate_lists(points, n_valid, spec: GridSpec):
+    """Occupied-cell CSR candidate gather — no per-cell table at all.
+
+    One stable sort by cell id turns the point buffer into a CSR layout
+    whose row pointers are *implicit*: the slice of cell-id range [a, b] is
+    ``[searchsorted(sorted_cid, a, left), searchsorted(sorted_cid, b+1,
+    left))``. The flat cell id is contiguous along z, so a query's 3x3x3
+    window is 9 contiguous id ranges (one per (dx, dy) column) — 18 binary
+    searches per query. The 9 segment lengths are prefix-summed into a
+    packed row of width ``neigh_cap`` and every slot maps back to
+    (segment, offset) via a scatter + running cumsum over the row. Slots
+    past ``neigh_cap`` are dropped — identical overflow semantics to the
+    dense table's ``mode='drop'`` scatter.
+
+    Memory: O(n_points) bookkeeping + the (N, C) candidate row that every
+    layout materializes; nothing scales with ``spec.n_cells``.
+    """
+    n = spec.n_points
+    _, _, rz = spec.resolution
+    res = jnp.asarray(spec.resolution, jnp.int32)
+    valid = jnp.arange(n) < n_valid
+    cc, cid = _cells(points, valid, spec)
+
+    order = jnp.argsort(cid).astype(jnp.int32)     # stable: sentinel rows last
+    sorted_cid = cid[order]
+
+    # 9 contiguous cell-id ranges per query: column (cx+dx, cy+dy), z in
+    # [cz-1, cz+1] clamped to the grid
+    col_cc = cc[:, None, :2] + jnp.asarray(_XY_OFFSETS)[None]  # (N, 9, 2)
+    col_ok = jnp.all((col_cc >= 0) & (col_cc < res[:2]), axis=-1)
+    col_cc = jnp.clip(col_cc, 0, res[:2] - 1)
+    col_base = (col_cc[..., 0] * res[1] + col_cc[..., 1]) * rz  # (N, 9)
+    z_lo = jnp.maximum(cc[:, 2] - 1, 0)[:, None]
+    z_hi = jnp.minimum(cc[:, 2] + 1, rz - 1)[:, None]
+    bounds = jnp.stack([col_base + z_lo, col_base + z_hi + 1], axis=0)
+    found = jnp.searchsorted(sorted_cid, bounds.reshape(-1),
+                             side="left").reshape(2, n, 9).astype(jnp.int32)
+    start, end = found[0], found[1]
+    cnt = jnp.where(col_ok, end - start, 0)
+    base = jnp.cumsum(cnt, axis=1) - cnt                       # (N, 9) excl.
+    total = base[:, -1] + cnt[:, -1]                           # (N,)
+
+    # segment of slot t = (number of j with base[j] <= t) - 1: scatter one
+    # marker per segment start and cumsum them along the packed row
+    # (zero-length segments stack their markers and are skipped)
+    slots = jnp.arange(spec.neigh_cap, dtype=jnp.int32)
+    rows = jnp.broadcast_to(jnp.arange(n)[:, None], (n, 9))
+    marks = jnp.zeros((n, spec.neigh_cap + 1), jnp.int32)
+    marks = marks.at[rows, jnp.clip(base, 0, spec.neigh_cap)].add(1)
+    seg = jnp.clip(jnp.cumsum(marks[:, :spec.neigh_cap], axis=1) - 1, 0, 8)
+    pos = (jnp.take_along_axis(start, seg, axis=1) + slots[None, :]
+           - jnp.take_along_axis(base, seg, axis=1))
+    cand = order[jnp.clip(pos, 0, n - 1)]                      # (N, C)
+    slot_ok = slots[None, :] < total[:, None]
+    self_ids = jnp.arange(n, dtype=jnp.int32)[:, None]
+    cand_valid = slot_ok & (cand != self_ids) & valid[:, None]
+    return cand, cand_valid, valid
+
+
 def candidate_lists(points, n_valid, spec: GridSpec):
     """Fixed-size per-query candidate ids (the query cell's neighborhood row).
 
     Returns (cand_idx (N, C) i32 safe-valued, cand_valid (N, C) bool,
     valid (N,) bool query mask)."""
+    if spec.layout == "csr":
+        return csr_candidate_lists(points, n_valid, spec)
     table, cid, valid = build_table(points, n_valid, spec)
     cand = table[jnp.clip(cid, 0, spec.n_cells - 1)]   # (N, C)
     self_ids = jnp.arange(spec.n_points, dtype=jnp.int32)[:, None]
@@ -266,28 +345,30 @@ def symmetric_edges(nbr_idx, nbr_mask) -> Tuple[jnp.ndarray, jnp.ndarray,
 
 # ---------------------------------------------------------------- diagnostics
 
-def _cell_counts_grid(pts: np.ndarray, res) -> np.ndarray:
-    res = np.asarray(res)
+def _neighborhood_counts(pts: np.ndarray, res) -> np.ndarray:
+    """3x3x3-neighborhood occupancy of every *occupied* cell.
+
+    Occupied-cell (CSR-style) computation — O(27 n log n) host work and O(n)
+    memory regardless of resolution, so the diagnostics scale to the same
+    paper-scale grids the csr layout unlocks. Empty cells host no queries, so
+    restricting to occupied cells loses nothing.
+    """
+    res = np.asarray(res, np.int64)
     lo, hi = pts.min(0), pts.max(0)
     extent = np.maximum(hi - lo, 1e-6)
     cc = np.clip(np.floor((pts - lo) / extent * res).astype(np.int64),
                  0, res - 1)
     cid = (cc[:, 0] * res[1] + cc[:, 1]) * res[2] + cc[:, 2]
-    return np.bincount(cid, minlength=int(np.prod(res))).reshape(tuple(res))
-
-
-def _neighborhood_counts(pts: np.ndarray, res) -> np.ndarray:
-    """Per-cell occupancy of the 3x3x3 neighborhood (3D box sum)."""
-    grid = _cell_counts_grid(pts, res)
-    for ax in range(3):
-        pad = [(0, 0)] * 3
-        pad[ax] = (1, 1)
-        padded = np.pad(grid, pad)
-        idx = np.arange(grid.shape[ax])
-        grid = (np.take(padded, idx, axis=ax)
-                + np.take(padded, idx + 1, axis=ax)
-                + np.take(padded, idx + 2, axis=ax))
-    return grid
+    occ, counts = np.unique(cid, return_counts=True)
+    occ_cc = np.stack([occ // (res[1] * res[2]),
+                       (occ // res[2]) % res[1],
+                       occ % res[2]], axis=-1)                 # (M, 3)
+    nbr = occ_cc[:, None, :] + _OFFSETS[None].astype(np.int64)  # (M, 27, 3)
+    ok = np.all((nbr >= 0) & (nbr < res), axis=-1)
+    nbr_cid = (nbr[..., 0] * res[1] + nbr[..., 1]) * res[2] + nbr[..., 2]
+    idx = np.clip(np.searchsorted(occ, nbr_cid), 0, len(occ) - 1)
+    found = (occ[idx] == nbr_cid) & ok
+    return np.where(found, counts[idx], 0).sum(axis=1)
 
 
 def overflow_count(points: np.ndarray, n_valid: int, spec: GridSpec) -> int:

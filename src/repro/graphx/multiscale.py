@@ -55,14 +55,27 @@ def multiscale_edges(points, n_valid, ms: MultiscaleSpec, *,
     """Union of per-level symmetric kNN edges with cross-level dedup masks.
 
     points: (n_finest, 3); n_valid: traced scalar — valid points must be a
-    prefix (nested sampling already orders them that way).
+    prefix (nested sampling already orders them that way) — or a traced
+    (n_levels,) vector of independent per-level valid counts (sharded
+    serving: each shard's slice of a level is its own prefix, and its length
+    is not determined by the total). The cross-level dedup below is already
+    driven by the per-level kNN validity masks, so dynamic level membership
+    needs no further changes.
     Returns (senders (E,), receivers (E,), edge_mask (E,) bool) with
     E = ms.n_edges static; masked slots have senders = receivers = 0.
     """
     assert points.shape[0] == ms.n_points, (points.shape, ms.n_points)
+    n_valid = jnp.asarray(n_valid)
+    if n_valid.ndim not in (0, 1):
+        raise ValueError(f"n_valid must be a scalar or (n_levels,) vector, "
+                         f"got shape {n_valid.shape}")
+    if n_valid.ndim == 1 and n_valid.shape[0] != len(ms.level_sizes):
+        raise ValueError(f"per-level n_valid has {n_valid.shape[0]} entries "
+                         f"for {len(ms.level_sizes)} levels")
     nbrs = []
-    for n_l, gspec in zip(ms.level_sizes, ms.grids):
-        nv = jnp.minimum(n_valid, n_l)
+    for lvl, (n_l, gspec) in enumerate(zip(ms.level_sizes, ms.grids)):
+        nv = (jnp.minimum(n_valid, n_l) if n_valid.ndim == 0
+              else n_valid[lvl])
         idx, _, mask = hashgrid.knn(points[:n_l], nv, gspec,
                                     impl=impl, interpret=interpret)
         nbrs.append((idx, mask))

@@ -21,16 +21,16 @@ from repro.graphx.multiscale import MultiscaleSpec, multiscale_edges
 from repro.models import meshgraphnet
 
 
-def make_infer_fn(cfg: GNNConfig, ms: MultiscaleSpec, *,
-                  knn_impl: str = "xla", interpret: bool = True,
-                  norm_in: Optional[Tuple[np.ndarray, np.ndarray]] = None,
-                  norm_out: Optional[Tuple[np.ndarray, np.ndarray]] = None,
-                  jit: bool = True):
-    """Build ``infer(params, points, normals, n_valid) -> (N, node_out)``.
+def make_graph_forward(cfg: GNNConfig, *,
+                       norm_in: Optional[Tuple[np.ndarray, np.ndarray]] = None,
+                       norm_out: Optional[Tuple[np.ndarray, np.ndarray]] = None):
+    """Featurize + model forward over an already-built edge set.
 
-    points/normals: (ms.n_points, 3) padded buffers; n_valid: scalar count of
-    real points (a prefix). ``norm_in``/``norm_out`` are optional (mean, std)
-    pairs folded into the compiled program (input encoding / output decoding).
+    Returns ``forward(params, points, normals, senders, receivers, emask)``
+    -> (N, node_out). The single-device pipeline and the shard_map'd sharded
+    pipeline differ only in how they produce (senders, receivers, emask), so
+    both wrap this one function — equivalence between them is then purely a
+    property of the graphs they build.
     Aggregation uses XLA segment_sum — the Pallas segment_agg path needs
     host-side edge sorting and is a training-time option, not a serving one.
     """
@@ -41,10 +41,8 @@ def make_infer_fn(cfg: GNNConfig, ms: MultiscaleSpec, *,
                  (jnp.asarray(norm_out[0], jnp.float32),
                   jnp.asarray(norm_out[1], jnp.float32)))
 
-    def infer(params, points, normals, n_valid):
+    def forward(params, points, normals, senders, receivers, emask):
         points = points.astype(jnp.float32)
-        senders, receivers, emask = multiscale_edges(
-            points, n_valid, ms, impl=knn_impl, interpret=interpret)
         feats = fx.node_input_features(points, normals, cfg.fourier_freqs)
         if in_stats is not None:
             feats = (feats - in_stats[0]) / in_stats[1]
@@ -57,6 +55,28 @@ def make_infer_fn(cfg: GNNConfig, ms: MultiscaleSpec, *,
         if out_stats is not None:
             pred = pred * out_stats[1] + out_stats[0]
         return pred
+
+    return forward
+
+
+def make_infer_fn(cfg: GNNConfig, ms: MultiscaleSpec, *,
+                  knn_impl: str = "xla", interpret: bool = True,
+                  norm_in: Optional[Tuple[np.ndarray, np.ndarray]] = None,
+                  norm_out: Optional[Tuple[np.ndarray, np.ndarray]] = None,
+                  jit: bool = True):
+    """Build ``infer(params, points, normals, n_valid) -> (N, node_out)``.
+
+    points/normals: (ms.n_points, 3) padded buffers; n_valid: scalar count of
+    real points (a prefix). ``norm_in``/``norm_out`` are optional (mean, std)
+    pairs folded into the compiled program (input encoding / output decoding).
+    """
+    forward = make_graph_forward(cfg, norm_in=norm_in, norm_out=norm_out)
+
+    def infer(params, points, normals, n_valid):
+        points = points.astype(jnp.float32)
+        senders, receivers, emask = multiscale_edges(
+            points, n_valid, ms, impl=knn_impl, interpret=interpret)
+        return forward(params, points, normals, senders, receivers, emask)
 
     return jax.jit(infer) if jit else infer
 

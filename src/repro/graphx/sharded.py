@@ -1,0 +1,351 @@
+"""Sharded paper-scale serving: per-device graph build + halo-ring inference.
+
+The paper's scalability claim (SIII-A) — partitions with L-hop halos make
+multi-device execution *exactly* equivalent to full-graph execution — applied
+to the serving path. One large request (paper-scale: ~2M points) is split by
+recursive coordinate bisection (``core.partitioning``) into one shard per
+device; each shard carries its owned points plus a halo ring, and a
+``shard_map``-wrapped copy of the single-device pipeline builds the shard's
+multi-scale hash-grid graph *on-device* and runs MeshGraphNet over it. The
+prediction is masked to owned nodes and gathered back into one cloud — no
+collective runs at all; the halos make each device's program self-contained,
+exactly as they do for training (mirroring Barwey et al., arXiv:2410.01657,
+for consistent distributed mesh-GNN inference).
+
+Why the halo ring is ``halo_hops + 1`` nodes deep
+-------------------------------------------------
+Training partitions (``core.halo``) carry nodes to hop ``h`` because their
+edges are *selected from the global edge list*. Here each device *rebuilds*
+its graph from points, so a node's local kNN list is trustworthy only when
+all of its true neighbors are present locally. Every kept edge decision
+(kNN membership, symmetric closure, cross-level dedup) involves the lists of
+its two endpoints, and kept edges reach endpoints at hop ``h``; their
+neighbors live at hop ``h + 1``. Carrying that one extra ring of *nodes*
+(never used as senders or receivers, only as kNN candidates) makes every
+kept-edge decision match the full graph bit-for-bit. Edges are then masked
+to ``hop(receiver) <= h - 1`` and ``hop(sender) <= h`` — the same rule as
+``core.halo.build_partition`` — and the usual induction gives exact owned
+outputs for ``h >= n_mp_layers`` (asserted to 1e-5 in
+``tests/test_sharded_serving.py``, including the ``h = L - 1`` failure case).
+
+Two planners produce the identical device-side layout:
+
+* ``method='graph'``: the true hop sets, via the host multi-scale edge list
+  and ``core.halo`` (exact; used by tests and moderate sizes);
+* ``method='geometric'``: no graph at all — every multi-scale edge is at
+  most ``halo_width`` long (the calibrated grid-cell width bounds the k-th
+  neighbor distance), so dilating the owned RCB box by ``t * halo_width``
+  bounds hop ``t`` from below. The resulting memberships are supersets of
+  the true rings, which preserves exactness, and planning stays O(n log n)
+  numpy with no cKDTree — the per-request serving path.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+try:
+    from jax import shard_map
+except ImportError:  # jax < 0.5
+    from jax.experimental.shard_map import shard_map
+
+from repro.configs.base import GNNConfig
+from repro.core import halo as halo_lib
+from repro.core import partitioning
+from repro.graphx import hashgrid
+from repro.graphx.multiscale import MultiscaleSpec, multiscale_edges
+from repro.graphx.pipeline import make_graph_forward
+
+_BATCH_KEYS = ("points", "normals", "level_counts", "recv_ok", "send_ok",
+               "owned")
+_EPS = 1e-5
+
+
+@dataclass(frozen=True)
+class ShardSpec:
+    """Static signature of a sharded inference program.
+
+    ``ms`` is the *per-shard* multi-scale spec: its level sizes are padded
+    caps on how many of each global level's points one shard may carry, and
+    its grids are calibrated over shard-local clouds (a shard's extent — and
+    hence its cell widths — differs from the full cloud's).
+    """
+    n_shards: int
+    halo_hops: int
+    ms: MultiscaleSpec
+
+    @property
+    def n_points(self) -> int:
+        return self.ms.n_points
+
+
+@dataclass
+class ShardPlan:
+    """One request's host-side plan: padded per-shard buffers + bookkeeping."""
+    spec: ShardSpec
+    global_ids: np.ndarray     # (P, Nmax) int64, padding slots masked
+    hop: np.ndarray            # (P, Nmax) int32, padding = large sentinel
+    owned: np.ndarray          # (P, Nmax) bool
+    level_counts: np.ndarray   # (P, L) int32 per-level local valid counts
+    points: np.ndarray         # (P, Nmax, 3) float32
+    normals: np.ndarray        # (P, Nmax, 3) float32
+    n_global: int
+
+    def batch(self) -> dict:
+        """The (P, ...) arrays consumed by ``make_sharded_infer_fn``."""
+        h = self.spec.halo_hops
+        return {
+            "points": jnp.asarray(self.points),
+            "normals": jnp.asarray(self.normals),
+            "level_counts": jnp.asarray(self.level_counts),
+            "recv_ok": jnp.asarray(self.hop <= h - 1),
+            "send_ok": jnp.asarray(self.hop <= h),
+            "owned": jnp.asarray(self.owned),
+        }
+
+    def gather(self, shard_out) -> np.ndarray:
+        """Scatter owned rows of (P, Nmax, F) back into one (n, F) cloud."""
+        shard_out = np.asarray(shard_out)
+        out = np.zeros((self.n_global,) + shard_out.shape[2:],
+                       shard_out.dtype)
+        for p in range(shard_out.shape[0]):
+            m = self.owned[p]
+            out[self.global_ids[p][m]] = shard_out[p][m]
+        return out
+
+
+# ------------------------------------------------------------------ planning
+
+def global_halo_width(points: np.ndarray, ms: MultiscaleSpec) -> float:
+    """Upper bound on any multi-scale edge length, from the grid geometry.
+
+    Exactness of a level's grid means the k-th-neighbor distance is at most
+    the narrowest cell width (``hashgrid.max_knn_cell_ratio <= 1``), so every
+    edge of the union is at most the max over levels of that width. Pure
+    numpy on extents — no neighbor search.
+    """
+    pts = np.asarray(points, np.float32)
+    width = 0.0
+    for n_l, g in zip(ms.level_sizes, ms.grids):
+        lvl = pts[: min(n_l, len(pts))]
+        extent = np.maximum(lvl.max(0) - lvl.min(0), 1e-6)
+        width = max(width, float((extent / np.asarray(g.resolution)).min()))
+    return width
+
+
+def _membership_from_graph(points: np.ndarray, labels: np.ndarray,
+                           n_shards: int, level_sizes: Sequence[int],
+                           k: int, ring_hops: int) -> dict:
+    """True hop rings from the host multi-scale edge list + ``core.halo``."""
+    from repro.core.multiscale import multiscale_edges as host_multiscale
+    s, r, _ = host_multiscale(points, list(level_sizes), k)
+    parts = halo_lib.build_partitions(s, r, labels, n_shards,
+                                      halo_hops=ring_hops)
+    return halo_lib.export_point_shards(parts)
+
+
+def _membership_geometric(points: np.ndarray, labels: np.ndarray,
+                          n_shards: int, ring_hops: int,
+                          halo_width: float) -> dict:
+    """Hop lower bounds from RCB-box dilation by ``halo_width`` per hop."""
+    pts = np.asarray(points, np.float32)
+    w = max(float(halo_width), 1e-12)
+    ids, hops, owned = [], [], []
+    for p in range(n_shards):
+        own = labels == p
+        if not own.any():
+            ids.append(np.zeros(0, np.int64))
+            hops.append(np.zeros(0, np.int32))
+            owned.append(np.zeros(0, bool))
+            continue
+        lo, hi = pts[own].min(0), pts[own].max(0)
+        d = np.maximum(np.maximum(lo - pts, pts - hi), 0.0).max(axis=1)
+        ghop = np.ceil(d / w - _EPS).astype(np.int32)
+        ghop[own] = 0
+        member = np.where(ghop <= ring_hops)[0]
+        ids.append(member.astype(np.int64))            # already sorted
+        hops.append(ghop[member])
+        owned.append(own[member])
+    return halo_lib.pack_point_shards(ids, hops, owned)
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _merge_calibrate(clouds: Sequence[np.ndarray], k: int, n_points: int,
+                     layout: str = "csr", cell_safety: float = 1.3,
+                     occupancy_safety: float = 1.5) -> hashgrid.GridSpec:
+    """One GridSpec that is exact for *every* shard's local cloud.
+
+    Per-shard calibration yields per-shard resolutions; the elementwise
+    minimum (widest cells) keeps the one-cell kNN window valid for all of
+    them, and the capacity is the worst observed neighborhood occupancy at
+    that shared resolution.
+    """
+    usable = [np.asarray(c, np.float32) for c in clouds if len(c) > 1]
+    if not usable:
+        return hashgrid.auto_spec(n_points, k, layout=layout)
+    specs = [hashgrid.calibrate_spec(c, k, n_points=n_points,
+                                     cell_safety=cell_safety, layout=layout)
+             for c in usable]
+    res = tuple(min(s.resolution[a] for s in specs) for a in range(3))
+    occ = max(int(hashgrid._neighborhood_counts(c, res).max())
+              for c in usable)
+    cap = _round_up(max(int(np.ceil(occ * occupancy_safety)), 2 * k + 2), 128)
+    return hashgrid.GridSpec(n_points=n_points, k=k, resolution=res,
+                             neigh_cap=min(cap, n_points), layout=layout)
+
+
+def build_shard_spec(membership: dict, points: np.ndarray,
+                     level_sizes: Sequence[int], k: int, n_shards: int,
+                     halo_hops: int, *, pad_factor: float = 1.0,
+                     grid_layout: str = "csr") -> ShardSpec:
+    """Freeze static shapes + local grids from a planned membership.
+
+    ``pad_factor`` > 1 leaves headroom so statistically similar requests
+    (the serving-bucket assumption) fit the same compiled program.
+    """
+    pts = np.asarray(points, np.float32)
+    ids = membership["global_ids"]
+    mask = membership["node_mask"]
+    caps, grids = [], []
+    for n_l in level_sizes:
+        counts = ((ids < n_l) & mask).sum(axis=1)
+        cap = max(int(counts.max()), 1)
+        cap = min(_round_up(int(np.ceil(cap * pad_factor)), 8), n_l)
+        caps.append(cap)
+        clouds = [pts[ids[p][(ids[p] < n_l) & mask[p]]]
+                  for p in range(ids.shape[0])]
+        grids.append(_merge_calibrate(clouds, k, cap, layout=grid_layout))
+    # caps are nondecreasing by nestedness; enforce against rounding quirks
+    for i in range(1, len(caps)):
+        if caps[i] < caps[i - 1]:
+            caps[i] = caps[i - 1]
+            grids[i] = hashgrid.GridSpec(
+                n_points=caps[i], k=k, resolution=grids[i].resolution,
+                neigh_cap=min(grids[i].neigh_cap, caps[i]),
+                layout=grids[i].layout)
+    ms = MultiscaleSpec(level_sizes=tuple(caps), k=k, grids=tuple(grids))
+    return ShardSpec(n_shards=n_shards, halo_hops=halo_hops, ms=ms)
+
+
+def plan_shards(points: np.ndarray, normals: np.ndarray, n_shards: int,
+                halo_hops: int, level_sizes: Sequence[int], k: int, *,
+                method: str = "graph", halo_width: Optional[float] = None,
+                labels: Optional[np.ndarray] = None,
+                spec: Optional[ShardSpec] = None,
+                pad_factor: float = 1.0,
+                grid_layout: str = "csr") -> ShardPlan:
+    """Plan one request's sharded execution (host-side, cheap numpy).
+
+    points/normals: (n, 3) with n == level_sizes[-1] (the nested-prefix
+    cloud the single-device pipeline would consume). With ``spec`` given the
+    plan is padded to its frozen shapes and raises ``ValueError`` when any
+    shard exceeds them (the serving rejection path); otherwise a fresh
+    ``ShardSpec`` is calibrated from this very request.
+    """
+    pts = np.asarray(points, np.float32)
+    n = len(pts)
+    if n != level_sizes[-1]:
+        raise ValueError(f"points ({n}) must match finest level "
+                         f"({level_sizes[-1]})")
+    if halo_hops < 1:
+        raise ValueError("halo_hops must be >= 1")
+    if labels is None:
+        labels = partitioning.partition_rcb(pts.astype(np.float64), n_shards)
+    ring = halo_hops + 1
+    if method == "graph":
+        mem = _membership_from_graph(pts, labels, n_shards, level_sizes, k,
+                                     ring)
+    elif method == "geometric":
+        if halo_width is None:
+            raise ValueError("method='geometric' needs halo_width (see "
+                             "global_halo_width)")
+        mem = _membership_geometric(pts, labels, n_shards, ring, halo_width)
+    else:
+        raise ValueError(f"unknown method {method!r}")
+
+    own_total = int(mem["owned"].sum())
+    if own_total != n:
+        raise AssertionError(f"ownership not a partition: {own_total} != {n}")
+
+    if spec is None:
+        spec = build_shard_spec(mem, pts, level_sizes, k, n_shards,
+                                halo_hops, pad_factor=pad_factor,
+                                grid_layout=grid_layout)
+    elif spec.n_shards != n_shards or spec.halo_hops != halo_hops:
+        raise ValueError("spec does not match requested shards/halo")
+
+    nmax = spec.n_points
+    ids, mask = mem["global_ids"], mem["node_mask"]
+    level_counts = np.stack([((ids < n_l) & mask).sum(axis=1)
+                             for n_l in level_sizes], axis=1).astype(np.int32)
+    for lvl, cap in enumerate(spec.ms.level_sizes):
+        over = level_counts[:, lvl] > cap
+        if over.any():
+            raise ValueError(
+                f"shard capacity exceeded at level {lvl}: "
+                f"{int(level_counts[over, lvl].max())} > cap {cap} "
+                "(recalibrate the ShardSpec or raise pad_factor)")
+
+    nrm = np.asarray(normals, np.float32)
+    P_ = n_shards
+    out = {
+        "global_ids": np.zeros((P_, nmax), np.int64),
+        "hop": np.full((P_, nmax), halo_lib.HOP_PAD, np.int32),
+        "owned": np.zeros((P_, nmax), bool),
+        "points": np.zeros((P_, nmax, 3), np.float32),
+        "normals": np.zeros((P_, nmax, 3), np.float32),
+    }
+    for p in range(P_):
+        m = int(mem["n_local"][p])
+        sel = ids[p, :m]
+        out["global_ids"][p, :m] = sel
+        out["hop"][p, :m] = mem["hop"][p, :m]
+        out["owned"][p, :m] = mem["owned"][p, :m]
+        out["points"][p, :m] = pts[sel]
+        out["normals"][p, :m] = nrm[sel]
+    return ShardPlan(spec=spec, global_ids=out["global_ids"],
+                     hop=out["hop"], owned=out["owned"],
+                     level_counts=level_counts, points=out["points"],
+                     normals=out["normals"], n_global=n)
+
+
+# ----------------------------------------------------------------- execution
+
+def make_sharded_infer_fn(cfg: GNNConfig, sspec: ShardSpec, mesh, *,
+                          axis: str = "data", knn_impl: str = "xla",
+                          interpret: bool = True, norm_in=None, norm_out=None,
+                          jit: bool = True):
+    """Build ``infer(params, batch) -> (P, Nmax, node_out)`` under shard_map.
+
+    ``batch`` is ``ShardPlan.batch()``; each device receives its own
+    (1, Nmax, ...) block, builds its shard's multi-scale graph with the
+    shard-local grids, masks edges to the halo rule, and runs the *same*
+    ``make_graph_forward`` as the single-device pipeline. No collectives:
+    the halos already make every shard self-contained; the gather back to
+    one cloud is ``ShardPlan.gather``.
+    """
+    forward = make_graph_forward(cfg, norm_in=norm_in, norm_out=norm_out)
+    ms = sspec.ms
+
+    def local(params, batch):
+        b = {k: v[0] for k, v in batch.items()}   # strip the shard axis
+        pts = b["points"].astype(jnp.float32)
+        s, r, em = multiscale_edges(pts, b["level_counts"], ms,
+                                    impl=knn_impl, interpret=interpret)
+        em = em & b["send_ok"][s] & b["recv_ok"][r]
+        s = jnp.where(em, s, 0)
+        r = jnp.where(em, r, 0)
+        pred = forward(params, pts, b["normals"], s, r, em)
+        return (pred * b["owned"][:, None].astype(pred.dtype))[None]
+
+    in_specs = (P(), {k: P(axis) for k in _BATCH_KEYS})
+    fn = shard_map(local, mesh=mesh, in_specs=in_specs, out_specs=P(axis))
+    return jax.jit(fn) if jit else fn

@@ -17,9 +17,20 @@ Microbatching: submitted requests queue per bucket; ``flush`` drains up to
 ``max_batch`` same-bucket requests per step through the bucket's batched
 infer fn and records per-request latency.
 
+Sharded serving (``shard_devices > 1``): one request is split across devices
+instead of batching requests — RCB partitions + halo rings via
+``repro.graphx.sharded``, each device building its own shard's graph under
+``shard_map`` (the paper-scale 2M-point mode; see README "Sharded serving").
+Requests whose shards outgrow the bucket's frozen shard shapes are rejected
+with ``Result.error`` set, like overflow rejections.
+
+Sampling is deterministic per (server seed, request id): resubmitting a
+request id reproduces its point cloud bit-for-bit regardless of what other
+traffic (or warmup) ran before it.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.serve_gnn --requests 8 \
-      --buckets 512,1024 --reduced
+      --buckets 512,1024 --reduced [--shard-devices 8]
 """
 from __future__ import annotations
 
@@ -37,9 +48,10 @@ import numpy as np
 from repro.configs.base import GNNConfig
 from repro.core.graph_build import sample_surface
 from repro.data import geometry as geo
-from repro.graphx import hashgrid
+from repro.graphx import hashgrid, sharded
 from repro.graphx.multiscale import MultiscaleSpec
 from repro.graphx.pipeline import make_batched_infer_fn
+from repro.launch.sharding import mesh_for_shards, shard_put
 from repro.models import meshgraphnet
 
 
@@ -54,9 +66,11 @@ class Bucket:
     """One padding bucket: static shapes + its compiled batched infer fn."""
     n_points: int
     ms: MultiscaleSpec
-    infer: object                      # jitted batched fn
+    infer: object                      # jitted batched fn (unsharded mode)
     compiles: int = 0
     served: int = 0
+    sspec: Optional[sharded.ShardSpec] = None   # sharded mode only
+    shard_infer: object = None                  # jitted shard_map fn
 
 
 @dataclass
@@ -76,6 +90,7 @@ class Result:
     latency_s: float
     bucket: int
     batch_size: int
+    error: Optional[str] = None        # set on rejected requests (fields NaN)
 
 
 @dataclass
@@ -84,6 +99,7 @@ class ServerStats:
     batch_sizes: List[int] = field(default_factory=list)
     t_serving: float = 0.0
     overflow_requests: int = 0         # clouds that exceeded a grid's cap
+    rejected_requests: int = 0         # returned with Result.error set
 
     def report(self) -> dict:
         lat = np.asarray(self.latencies_s) if self.latencies_s else \
@@ -110,37 +126,61 @@ class GNNServer:
                  *, params=None, max_batch: int = 4, n_levels: int = 3,
                  knn_impl: str = "xla", interpret: bool = True,
                  norm_in=None, norm_out=None, seed: int = 0,
-                 reference=None, check_requests: bool = True):
+                 reference=None, check_requests: bool = True,
+                 reject_overflow: bool = False, shard_devices: int = 1,
+                 shard_pad_factor: float = 1.3):
         self.cfg = cfg
         self.max_batch = int(max_batch)
         self.check_requests = check_requests
+        self.reject_overflow = reject_overflow
+        self.shard_devices = int(shard_devices)
         self.params = params if params is not None else meshgraphnet.init(
             jax.random.PRNGKey(seed), cfg)
-        self._rng = np.random.default_rng(seed)
+        self.seed = int(seed)
         self._queues: Dict[int, deque] = {}
         self._buckets: Dict[int, Bucket] = {}
         self.stats = ServerStats()
         self._next_id = 0
+        self._mesh = (mesh_for_shards(self.shard_devices)
+                      if self.shard_devices > 1 else None)
         # grid specs are calibrated from a reference geometry representative
         # of the traffic; pass (verts, faces) to match your fleet
         ref_verts, ref_faces = reference if reference is not None else \
             geo.car_surface(geo.sample_params(0))
+        self._reference = (ref_verts, ref_faces)
         for n in sorted(bucket_sizes):
             levels = _level_sizes(n, n_levels)
             # one-time host calibration on a reference cloud: the only
             # cKDTree use in the server, never in the request path
-            ref_pts, _ = sample_surface(ref_verts, ref_faces, n,
-                                        np.random.default_rng(0))
+            ref_pts, ref_nrm = sample_surface(ref_verts, ref_faces, n,
+                                              np.random.default_rng(0))
             grids = tuple(hashgrid.calibrate_spec(ref_pts[:m],
                                                   cfg.k_neighbors,
                                                   n_points=m)
                           for m in levels)
             ms = MultiscaleSpec(level_sizes=levels, k=cfg.k_neighbors,
                                 grids=grids)
-            infer = make_batched_infer_fn(cfg, ms, knn_impl=knn_impl,
-                                          interpret=interpret,
-                                          norm_in=norm_in, norm_out=norm_out)
-            self._buckets[n] = Bucket(n_points=n, ms=ms, infer=infer)
+            if self.shard_devices > 1:
+                # freeze per-shard shapes/grids from the reference plan;
+                # per-request planning is then cKDTree-free geometric numpy
+                ref_plan = sharded.plan_shards(
+                    ref_pts, ref_nrm, self.shard_devices, cfg.n_mp_layers,
+                    levels, cfg.k_neighbors, method="geometric",
+                    halo_width=sharded.global_halo_width(ref_pts, ms),
+                    pad_factor=shard_pad_factor)
+                sspec = ref_plan.spec
+                shard_infer = sharded.make_sharded_infer_fn(
+                    cfg, sspec, self._mesh, knn_impl=knn_impl,
+                    interpret=interpret, norm_in=norm_in, norm_out=norm_out)
+                self._buckets[n] = Bucket(n_points=n, ms=ms, infer=None,
+                                          sspec=sspec,
+                                          shard_infer=shard_infer)
+            else:
+                infer = make_batched_infer_fn(cfg, ms, knn_impl=knn_impl,
+                                              interpret=interpret,
+                                              norm_in=norm_in,
+                                              norm_out=norm_out)
+                self._buckets[n] = Bucket(n_points=n, ms=ms, infer=infer)
             self._queues[n] = deque()
 
     # ------------------------------------------------------------- request IO
@@ -171,18 +211,31 @@ class GNNServer:
     # ------------------------------------------------------------- serving
 
     def warmup(self):
-        """Compile each bucket's program on a dummy batch (max_batch wide)."""
-        verts, faces = geo.car_surface(geo.sample_params(0))
+        """Compile each bucket's program on a dummy batch (max_batch wide).
+
+        Uses the calibration reference geometry so the dummy request always
+        fits the frozen shapes; a warmup rejection (possible only if the
+        reference itself cannot be planned, i.e. misconfiguration) is
+        surfaced instead of silently skipping the compile.
+        """
+        verts, faces = self._reference
+        width = 1 if self.shard_devices > 1 else self.max_batch
         for n, b in self._buckets.items():
-            batch = [Request(verts, faces, -1, n)] * self.max_batch
-            self._run_batch(b, batch, record=False)
+            batch = [Request(verts, faces, -1, n)] * width
+            results = self._run_batch(b, batch, record=False)
+            errs = [r.error for r in results if r.error is not None]
+            if errs:
+                raise RuntimeError(
+                    f"warmup failed for bucket {n}: {errs[0]}")
             b.compiles += 1
 
     def _sample(self, req: Request, n: int):
-        pts, normals = sample_surface(req.verts, req.faces, n, self._rng)
-        return pts, normals
+        # deterministic per (server seed, request id): independent of what
+        # other traffic or warmup ran before this request
+        rng = np.random.default_rng((self.seed, req.request_id + 1))
+        return sample_surface(req.verts, req.faces, n, rng)
 
-    def _check_cloud(self, b: Bucket, pts: np.ndarray, rid: int):
+    def _check_cloud(self, b: Bucket, pts: np.ndarray, rid: int) -> int:
         """Cheap numpy guard against out-of-distribution geometries: a cloud
         denser than the calibration reference can overflow a grid's
         neighborhood capacity, which would silently drop kNN candidates."""
@@ -195,36 +248,92 @@ class GNNServer:
                 f"calibrated grid ({dropped} candidate slots dropped) — "
                 "neighbor sets may be approximate; recalibrate the server "
                 "with a representative reference geometry")
+        return dropped
+
+    def _reject(self, req: Request, b: Bucket, reason: str,
+                pts: np.ndarray, record: bool) -> Result:
+        if record:
+            self.stats.rejected_requests += 1
+        nan = np.full((b.n_points, self.cfg.node_out), np.nan, np.float32)
+        t = time.perf_counter()
+        return Result(request_id=req.request_id, points=pts, fields=nan,
+                      latency_s=t - (req.t_submit or t), bucket=b.n_points,
+                      batch_size=0, error=reason)
+
+    def _run_sharded(self, b: Bucket, reqs, samples,
+                     record: bool) -> List[Result]:
+        """One shard_map call per request: the batch axis is the shard axis."""
+        results = []
+        for req, (pts, nrm) in zip(reqs, samples):
+            try:
+                plan = sharded.plan_shards(
+                    pts, nrm, self.shard_devices, self.cfg.n_mp_layers,
+                    b.ms.level_sizes, self.cfg.k_neighbors,
+                    method="geometric",
+                    halo_width=sharded.global_halo_width(pts, b.ms),
+                    spec=b.sspec)
+            except ValueError as e:
+                results.append(self._reject(req, b, str(e), pts, record))
+                continue
+            out = b.shard_infer(self.params,
+                                shard_put(plan.batch(), self._mesh))
+            fields = plan.gather(np.asarray(jax.block_until_ready(out)))
+            t_done = time.perf_counter()
+            lat = t_done - (req.t_submit or t_done)
+            results.append(Result(request_id=req.request_id, points=pts,
+                                  fields=fields, latency_s=lat,
+                                  bucket=b.n_points, batch_size=1))
+            if record:
+                self.stats.latencies_s.append(lat)
+                self.stats.batch_sizes.append(1)
+                b.served += 1
+        return results
 
     def _run_batch(self, b: Bucket, reqs: List[Request],
                    record: bool = True) -> List[Result]:
         n = b.n_points
+        results: List[Result] = []
+        ok_reqs, samples = [], []
+        for req in reqs:
+            pts, nrm = self._sample(req, n)
+            dropped = 0
+            if record and self.check_requests:
+                dropped = self._check_cloud(b, pts, req.request_id)
+            if dropped and self.reject_overflow:
+                results.append(self._reject(
+                    req, b, f"grid overflow: {dropped} candidate slots "
+                    "dropped (geometry denser than calibration reference)",
+                    pts, record))
+                continue
+            ok_reqs.append(req)
+            samples.append((pts, nrm))
+        if not ok_reqs:
+            return results
+        if b.sspec is not None:
+            return results + self._run_sharded(b, ok_reqs, samples, record)
         # static batcher: always pad to max_batch rows so each bucket
         # compiles exactly once regardless of how full the microbatch is
-        rows = max(self.max_batch, len(reqs))
+        rows = max(self.max_batch, len(ok_reqs))
         pts = np.zeros((rows, n, 3), np.float32)
         nrm = np.zeros((rows, n, 3), np.float32)
-        for i, req in enumerate(reqs):
-            pts[i], nrm[i] = self._sample(req, n)
-            if record and self.check_requests:
-                self._check_cloud(b, pts[i], req.request_id)
-        for i in range(len(reqs), rows):   # pad rows replay the last request
-            pts[i], nrm[i] = pts[len(reqs) - 1], nrm[len(reqs) - 1]
+        for i, (p, m) in enumerate(samples):
+            pts[i], nrm[i] = p, m
+        for i in range(len(ok_reqs), rows):  # pad rows replay the last request
+            pts[i], nrm[i] = pts[len(ok_reqs) - 1], nrm[len(ok_reqs) - 1]
         out = b.infer(self.params, jnp.asarray(pts), jnp.asarray(nrm),
                       jnp.full((rows,), n, jnp.int32))
         out = np.asarray(jax.block_until_ready(out))
         t_done = time.perf_counter()
-        results = []
-        for i, req in enumerate(reqs):
+        for i, req in enumerate(ok_reqs):
             lat = t_done - (req.t_submit or t_done)
             results.append(Result(request_id=req.request_id, points=pts[i],
                                   fields=out[i], latency_s=lat,
-                                  bucket=n, batch_size=len(reqs)))
+                                  bucket=n, batch_size=len(ok_reqs)))
             if record:
                 self.stats.latencies_s.append(lat)
         if record:
-            self.stats.batch_sizes.append(len(reqs))
-            b.served += len(reqs)
+            self.stats.batch_sizes.append(len(ok_reqs))
+            b.served += len(ok_reqs)
         return results
 
     def flush(self) -> List[Result]:
@@ -255,6 +364,10 @@ def main():
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--knn-impl", default="xla", choices=["xla", "pallas"])
+    ap.add_argument("--shard-devices", type=int, default=1,
+                    help="split each request across this many devices "
+                    "(requires that many jax devices, e.g. via "
+                    "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
     args = ap.parse_args()
 
     cfg = GNNConfig()
@@ -262,7 +375,8 @@ def main():
         cfg = cfg.reduced()
     buckets = tuple(int(b) for b in args.buckets.split(","))
     server = GNNServer(cfg, buckets, max_batch=args.max_batch,
-                       knn_impl=args.knn_impl)
+                       knn_impl=args.knn_impl,
+                       shard_devices=args.shard_devices)
     t0 = time.perf_counter()
     server.warmup()
     print(f"warmup (compile {len(buckets)} buckets): "

@@ -172,6 +172,27 @@ def cache_seq_axes(shape: ShapeConfig, mesh):
     return ("model",) if "model" in mesh.axis_names else ()
 
 
+def mesh_for_shards(n_shards: int, devices=None, axis: str = "data"):
+    """1-axis mesh over the first ``n_shards`` devices (sharded GNN serving).
+
+    Unlike ``launch.mesh.make_host_mesh`` this does not require the shard
+    count to use every device — a 2-way sharded request on an 8-device host
+    runs on devices[:2].
+    """
+    import numpy as np
+    devices = list(devices if devices is not None else jax.devices())
+    if n_shards < 1 or n_shards > len(devices):
+        raise ValueError(f"need 1 <= n_shards <= {len(devices)} devices, "
+                         f"got {n_shards}")
+    return jax.sharding.Mesh(np.asarray(devices[:n_shards]), (axis,))
+
+
+def shard_put(batch: dict, mesh, axis: str = "data") -> dict:
+    """device_put a (P, ...) batch dict with its leading axis on ``axis``."""
+    sh = NamedSharding(mesh, P(axis))
+    return {k: jax.device_put(jnp.asarray(v), sh) for k, v in batch.items()}
+
+
 def cache_specs(cfg: ModelConfig, shape: ShapeConfig, mesh, cache_tree):
     """Specs for a decode cache/state pytree (shapes from eval_shape).
 

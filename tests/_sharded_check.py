@@ -1,0 +1,111 @@
+"""Multi-device sharded-serving checks, run in a subprocess with
+XLA_FLAGS=--xla_force_host_platform_device_count=8 (jax device count is
+locked at first init, so the main pytest process cannot do this).
+
+THE serving-side counterpart of the paper's SIII-A equivalence claim:
+sharded inference (per-device graph build + L-hop halo rings under
+shard_map) must reproduce the single-device ``graphx.pipeline`` output on
+owned nodes to <= 1e-5 max abs error, across 1/2/4/8 devices, multiple
+MultiscaleSpecs, and both planners — and must FAIL with h = L - 1 halos,
+mirroring ``tests/test_partition_equivalence.py``.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import GNNConfig
+from repro.core.graph_build import sample_surface
+from repro.data import geometry as geo
+from repro.graphx import hashgrid, sharded
+from repro.graphx.multiscale import MultiscaleSpec
+from repro.graphx.pipeline import make_infer_fn
+from repro.launch.serve_gnn import GNNServer
+from repro.launch.sharding import mesh_for_shards, shard_put
+from repro.models import meshgraphnet
+
+TOL = 1e-5
+
+
+def reference_setup(cfg, levels, seed=0):
+    n = levels[-1]
+    verts, faces = geo.car_surface(geo.sample_params(seed))
+    pts, nrm = sample_surface(verts, faces, n, np.random.default_rng(seed))
+    grids = tuple(hashgrid.calibrate_spec(pts[:m], cfg.k_neighbors,
+                                          n_points=m) for m in levels)
+    ms = MultiscaleSpec(level_sizes=levels, k=cfg.k_neighbors, grids=grids)
+    for m, g in zip(levels, grids):
+        assert hashgrid.max_knn_cell_ratio(pts[:m], m, g) <= 1.0
+        assert hashgrid.overflow_count(pts[:m], m, g) == 0
+    params = meshgraphnet.init(jax.random.PRNGKey(1), cfg)
+    ref = np.asarray(make_infer_fn(cfg, ms)(
+        params, jnp.asarray(pts), jnp.asarray(nrm), n))
+    return pts, nrm, ms, params, ref
+
+
+def run_sharded(cfg, pts, nrm, ms, params, n_shards, halo_hops, method):
+    kw = ({"halo_width": sharded.global_halo_width(pts, ms)}
+          if method == "geometric" else {})
+    plan = sharded.plan_shards(pts, nrm, n_shards, halo_hops,
+                               ms.level_sizes, cfg.k_neighbors,
+                               method=method, **kw)
+    mesh = mesh_for_shards(n_shards)
+    infer = sharded.make_sharded_infer_fn(cfg, plan.spec, mesh)
+    out = infer(params, shard_put(plan.batch(), mesh))
+    return plan.gather(np.asarray(jax.block_until_ready(out)))
+
+
+def main():
+    assert len(jax.devices()) == 8, jax.devices()
+    cfg = GNNConfig().reduced()   # n_mp_layers = 3 = halo
+
+    # ---- spec 1: three levels, every device count, both planners ----
+    levels = (128, 256, 512)
+    pts, nrm, ms, params, ref = reference_setup(cfg, levels)
+    for n_shards in (1, 2, 4, 8):
+        for method in ("graph", "geometric"):
+            got = run_sharded(cfg, pts, nrm, ms, params, n_shards,
+                              cfg.n_mp_layers, method)
+            d = float(np.abs(got - ref).max())
+            assert d <= TOL, (n_shards, method, d)
+            print(f"equiv levels={levels} P={n_shards} {method}: "
+                  f"maxdiff={d:.2e}")
+
+    # ---- spec 2: two levels, different geometry seed ----
+    levels2 = (256, 512)
+    pts2, nrm2, ms2, params2, ref2 = reference_setup(cfg, levels2, seed=5)
+    for method in ("graph", "geometric"):
+        got = run_sharded(cfg, pts2, nrm2, ms2, params2, 4,
+                          cfg.n_mp_layers, method)
+        d = float(np.abs(got - ref2).max())
+        assert d <= TOL, (method, d)
+        print(f"equiv levels={levels2} P=4 {method}: maxdiff={d:.2e}")
+
+    # ---- h = L - 1 must BREAK equivalence (paper: halo == MP layers) ----
+    got = run_sharded(cfg, pts, nrm, ms, params, 4, cfg.n_mp_layers - 1,
+                      "graph")
+    d = float(np.abs(got - ref).max())
+    assert d > 1e-4, f"h=L-1 unexpectedly equivalent (maxdiff={d:.2e})"
+    print(f"insufficient halo breaks equivalence: maxdiff={d:.2e}")
+
+    # ---- end to end: sharded GNNServer == unsharded GNNServer ----
+    scfg = cfg.replace(levels=(64, 128, 256))
+    verts, faces = geo.car_surface(geo.sample_params(3))
+    s1 = GNNServer(scfg, (256,), max_batch=1, seed=7)
+    [r1] = s1.serve([(verts, faces, 256)])
+    s8 = GNNServer(scfg, (256,), max_batch=1, seed=7, shard_devices=8)
+    [r8] = s8.serve([(verts, faces, 256)])
+    assert np.array_equal(r1.points, r8.points)
+    d = float(np.abs(r1.fields - r8.fields).max())
+    assert d <= TOL, d
+    assert r8.error is None and np.isfinite(r8.fields).all()
+    print(f"sharded server == unsharded server: maxdiff={d:.2e}")
+
+    print("ALL_OK")
+
+
+if __name__ == "__main__":
+    main()

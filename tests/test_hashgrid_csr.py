@@ -1,0 +1,158 @@
+"""Occupied-cell CSR hash grid: hypothesis-driven exactness vs cKDTree over
+adversarial cloud families, dense-vs-CSR regression, and the O(points)
+memory property (resolutions whose dense table could never be allocated)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.graph_build import sample_surface
+from repro.data import geometry as geo
+from repro.graphx import hashgrid
+
+
+def _make_cloud(family: str, n: int, rng: np.random.Generator) -> np.ndarray:
+    if family == "uniform":
+        return rng.random((n, 3)).astype(np.float32)
+    if family == "clustered":
+        k = max(n // 32, 1)
+        centers = rng.random((k, 3)).astype(np.float32) * 10.0
+        return (centers[rng.integers(0, k, n)]
+                + rng.normal(scale=0.05, size=(n, 3))).astype(np.float32)
+    if family == "coplanar":
+        pts = rng.random((n, 3)).astype(np.float32)
+        pts[:, 2] = 0.25          # degenerate axis: zero extent
+        return pts
+    if family == "duplicates":
+        base = rng.random((max(n // 3, 1), 3)).astype(np.float32)
+        return base[rng.integers(0, len(base), n)]
+    raise ValueError(family)
+
+
+def _assert_knn_matches_ckdtree(pts: np.ndarray, k: int,
+                                spec: hashgrid.GridSpec):
+    """Compare against cKDTree robustly under distance ties (duplicate or
+    symmetric points): the sorted neighbor distances must agree exactly, and
+    where the k-th distance is unique the neighbor *sets* must agree."""
+    from scipy.spatial import cKDTree
+    n = len(pts)
+    idx, d2, mask = jax.jit(hashgrid.knn, static_argnames=("spec",))(
+        jnp.asarray(pts), n, spec)
+    idx, d2, mask = map(np.asarray, (idx, d2, mask))
+    kq = min(k + 2, n)   # one spare row to detect k-th-distance ties
+    tdist, tidx = cKDTree(pts).query(pts, k=kq)
+    tdist, tidx = np.atleast_2d(tdist), np.atleast_2d(tidx)
+    for i in range(n):
+        pairs = [(d, j) for d, j in zip(tdist[i], tidx[i]) if j != i]
+        true_nbrs = pairs[:k]
+        got = sorted(zip(np.sqrt(d2[i][mask[i]]), idx[i][mask[i]]))
+        assert len(got) == len(true_nbrs), i
+        np.testing.assert_allclose([d for d, _ in got],
+                                   [d for d, _ in true_nbrs],
+                                   rtol=1e-4, atol=1e-6, err_msg=f"query {i}")
+        unique_kth = (len(pairs) <= k
+                      or pairs[k][0] > true_nbrs[-1][0] + 1e-6)
+        if unique_kth:
+            # no tie at the k-th boundary: neighbor sets must match exactly
+            assert {j for _, j in got} == {j for _, j in true_nbrs}, i
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    family=st.sampled_from(["uniform", "clustered", "coplanar", "duplicates"]),
+    n=st.integers(30, 400),
+    k=st.integers(2, 8),
+    seed=st.integers(0, 10_000),
+)
+def test_csr_knn_exact_property(family, n, k, seed):
+    rng = np.random.default_rng(seed)
+    pts = _make_cloud(family, n, rng)
+    spec = hashgrid.calibrate_spec(pts, k, layout="csr")
+    assert spec.layout == "csr"
+    assert hashgrid.overflow_count(pts, n, spec) == 0
+    _assert_knn_matches_ckdtree(pts, k, spec)
+
+
+@pytest.mark.parametrize("family,n,k,seed", [
+    ("coplanar", 200, 5, 0),
+    ("duplicates", 150, 4, 1),
+    ("clustered", 300, 6, 2),
+])
+def test_csr_knn_exact_examples(family, n, k, seed):
+    """Pinned regressions for the degenerate families (no hypothesis shim
+    variance): coplanar clouds, duplicate points, tight clusters."""
+    rng = np.random.default_rng(seed)
+    pts = _make_cloud(family, n, rng)
+    spec = hashgrid.calibrate_spec(pts, k, layout="csr")
+    _assert_knn_matches_ckdtree(pts, k, spec)
+
+
+@pytest.mark.parametrize("n,k,seed", [(512, 6, 0), (300, 4, 3)])
+def test_csr_matches_dense_table(n, k, seed):
+    """Same spec modulo layout -> identical neighbor sets and masks (the
+    dense table is the reference implementation the CSR layout replaced)."""
+    verts, faces = geo.car_surface(geo.sample_params(seed))
+    pts, _ = sample_surface(verts, faces, n, np.random.default_rng(seed))
+    dense = hashgrid.calibrate_spec(pts, k, layout="dense")
+    csr = hashgrid.GridSpec(n_points=dense.n_points, k=k,
+                            resolution=dense.resolution,
+                            neigh_cap=dense.neigh_cap, layout="csr")
+    id_, dd, md = hashgrid.knn(jnp.asarray(pts), n, dense)
+    ic, dc, mc = hashgrid.knn(jnp.asarray(pts), n, csr)
+    np.testing.assert_array_equal(np.asarray(md), np.asarray(mc))
+    np.testing.assert_allclose(np.asarray(dd), np.asarray(dc), rtol=1e-6)
+    for a, b, m in zip(np.asarray(id_), np.asarray(ic), np.asarray(md)):
+        assert set(a[m].tolist()) == set(b[m].tolist())
+
+
+def test_csr_candidate_lists_match_dense():
+    """Candidate *sets* per query agree between layouts (ordering differs:
+    dense packs by offset-of-home-cell, CSR by neighbor-cell segment)."""
+    pts = np.random.default_rng(7).random((257, 3)).astype(np.float32)
+    spec_d = hashgrid.calibrate_spec(pts, 5, n_points=288, layout="dense")
+    spec_c = hashgrid.GridSpec(n_points=288, k=5,
+                               resolution=spec_d.resolution,
+                               neigh_cap=spec_d.neigh_cap, layout="csr")
+    buf = np.zeros((288, 3), np.float32)
+    buf[:257] = pts
+    cd, vd, qd = map(np.asarray,
+                     hashgrid.candidate_lists(jnp.asarray(buf), 257, spec_d))
+    cc, vc, qc = map(np.asarray,
+                     hashgrid.csr_candidate_lists(jnp.asarray(buf), 257,
+                                                  spec_c))
+    np.testing.assert_array_equal(qd, qc)
+    for i in range(257):
+        assert set(cd[i][vd[i]].tolist()) == set(cc[i][vc[i]].tolist()), i
+
+
+def test_csr_huge_grid_o_points_memory():
+    """A resolution whose dense table would be ~17M cells x cap (gigabytes)
+    runs fine under CSR — nothing is materialized over the grid."""
+    rng = np.random.default_rng(11)
+    n, k = 4096, 6
+    pts = rng.random((n, 3)).astype(np.float32)
+    spec = hashgrid.GridSpec(n_points=n, k=k, resolution=(256, 256, 256),
+                             neigh_cap=128, layout="csr")
+    assert spec.n_cells == 256 ** 3
+    idx, d2, mask = hashgrid.knn(jnp.asarray(pts), n, spec)
+    # at this resolution cells are far wider than the 4096-point kNN radius?
+    # no — verify exactness explicitly instead of assuming
+    assert hashgrid.overflow_count(pts, n, spec) == 0
+    if hashgrid.max_knn_cell_ratio(pts, n, spec) <= 1.0:
+        _assert_knn_matches_ckdtree(pts, k, spec)
+    # regardless, every returned neighbor is a real point and masks are sane
+    idx, mask = np.asarray(idx), np.asarray(mask)
+    assert (idx[mask] >= 0).all() and (idx[mask] < n).all()
+
+
+def test_calibrate_layouts():
+    """calibrate_spec: dense respects the cell budget, CSR may exceed it."""
+    verts, faces = geo.car_surface(geo.sample_params(4))
+    pts, _ = sample_surface(verts, faces, 2048, np.random.default_rng(4))
+    d = hashgrid.calibrate_spec(pts, 6, layout="dense", cell_budget=2.0)
+    assert d.n_cells <= max(2.0 * 2048, 27)
+    c = hashgrid.calibrate_spec(pts, 6, layout="csr", cell_budget=2.0)
+    assert c.layout == "csr"
+    # csr ignores the dense budget -> at least as fine a grid
+    assert c.n_cells >= d.n_cells

@@ -1,0 +1,96 @@
+"""Degenerate cases of the partition bookkeeping (surfaced while writing the
+sharded-serving equivalence tests): n_parts=1, empty partitions, empty
+labelings, and the point-shard export used by sharded serving."""
+import numpy as np
+import pytest
+
+from repro.core import halo, partitioning
+from repro.core.graph_build import knn_edges
+
+
+def _graph(n=60, k=3, seed=0):
+    rng = np.random.default_rng(seed)
+    pos = rng.random((n, 3)).astype(np.float32)
+    s, r = knn_edges(pos, k)
+    return pos, s, r
+
+
+def test_halo_overhead_single_partition():
+    pos, s, r = _graph()
+    labels = np.zeros(len(pos), np.int32)
+    parts = halo.build_partitions(s, r, labels, 1, halo_hops=2)
+    stats = halo.halo_overhead(parts, len(pos))
+    assert stats["replication_factor"] == 1.0
+    assert stats["halo_fraction"] == 0.0
+    assert stats["max_nodes"] == len(pos)
+
+
+def test_halo_overhead_no_partitions():
+    stats = halo.halo_overhead([], 100)
+    assert stats == {"replication_factor": 0.0, "halo_fraction": 1.0,
+                     "max_nodes": 0, "max_edges": 0}
+
+
+def test_halo_overhead_empty_partition():
+    """A label never assigned yields an empty partition; stats stay finite."""
+    pos, s, r = _graph()
+    labels = np.zeros(len(pos), np.int32)   # partition 1 gets nothing
+    parts = halo.build_partitions(s, r, labels, 2, halo_hops=1)
+    assert parts[1].n_nodes == 0 and parts[1].n_edges == 0
+    stats = halo.halo_overhead(parts, len(pos))
+    assert np.isfinite(stats["replication_factor"])
+    assert stats["max_nodes"] == parts[0].n_nodes
+
+
+def test_balance_stats_degenerates():
+    assert partitioning.balance_stats(np.zeros(10, np.int32), 1) == {
+        "min": 10, "max": 10, "imbalance": 1.0}
+    empty = partitioning.balance_stats(np.array([], np.int32), 4)
+    assert empty == {"min": 0, "max": 0, "imbalance": 1.0}
+    # empty partition present: finite imbalance
+    st = partitioning.balance_stats(np.array([0, 0, 2, 2], np.int32), 3)
+    assert st["min"] == 0 and st["max"] == 2
+    assert np.isfinite(st["imbalance"])
+
+
+def test_partition_rcb_more_parts_than_nodes():
+    """RCB assigns every point somewhere even when some parts stay empty."""
+    pos = np.random.default_rng(1).random((3, 3))
+    labels = partitioning.partition_rcb(pos, 5)
+    assert labels.shape == (3,)
+    assert (labels >= 0).all() and (labels < 5).all()
+    stats = partitioning.balance_stats(labels, 5)
+    assert stats["min"] == 0 and np.isfinite(stats["imbalance"])
+
+
+def test_partition_hop_of_recorded():
+    pos, s, r = _graph(n=80, k=3, seed=2)
+    labels = partitioning.partition(s, r, len(pos), 3, positions=pos)
+    parts = halo.build_partitions(s, r, labels, 3, halo_hops=2)
+    for p in parts:
+        assert p.hop_of is not None and len(p.hop_of) == p.n_nodes
+        assert (p.hop_of[: p.n_owned] == 0).all()
+        if p.n_nodes > p.n_owned:
+            assert (p.hop_of[p.n_owned:] >= 1).all()
+            assert p.hop_of.max() <= 2
+
+
+def test_export_point_shards_layout():
+    pos, s, r = _graph(n=80, k=3, seed=3)
+    labels = partitioning.partition(s, r, len(pos), 3, positions=pos)
+    parts = halo.build_partitions(s, r, labels, 3, halo_hops=2)
+    out = halo.export_point_shards(parts)
+    assert out["global_ids"].shape == out["hop"].shape
+    for i, p in enumerate(parts):
+        m = int(out["n_local"][i])
+        assert m == p.n_nodes
+        ids = out["global_ids"][i, :m]
+        assert (np.diff(ids) > 0).all()           # sorted by global id
+        assert set(ids.tolist()) == set(p.global_nodes.tolist())
+        assert not out["node_mask"][i, m:].any()
+        assert (out["hop"][i, m:] == halo.HOP_PAD).all()
+        assert out["owned"][i, :m].sum() == p.n_owned
+    with pytest.raises(ValueError, match="pad size"):
+        halo.export_point_shards(parts, pad_nodes=1)
+    with pytest.raises(ValueError, match="at least one"):
+        halo.export_point_shards([])

@@ -42,8 +42,29 @@ def test_bucket_routing_edges():
     server = GNNServer(_cfg(), (128, 256), max_batch=2)
     assert server.bucket_for(None) == 256       # default: finest bucket
     assert server.bucket_for(1) == 128
+    assert server.bucket_for(128) == 128        # exactly at the boundary
     assert server.bucket_for(129) == 256
+    assert server.bucket_for(256) == 256
     assert server.bucket_for(10_000) == 256     # oversized -> largest
+
+
+def test_request_exactly_at_bucket_boundary():
+    """n_points == bucket size keeps the request in that bucket and returns
+    exactly bucket-size outputs."""
+    server = GNNServer(_cfg(), (128, 256), max_batch=2)
+    verts, faces = geo.car_surface(geo.sample_params(0))
+    [res] = server.serve([(verts, faces, 128)])
+    assert res.bucket == 128
+    assert res.fields.shape == (128, 4)
+    assert np.isfinite(res.fields).all()
+
+
+def test_empty_flush():
+    server = GNNServer(_cfg(), (128,), max_batch=2)
+    assert server.pending() == 0
+    assert server.flush() == []
+    assert server.stats.report()["requests"] == 0
+    assert server.stats.batch_sizes == []
 
 
 def test_microbatching_caps_batch_size():
@@ -99,3 +120,57 @@ def test_deterministic_across_flushes():
         [res] = server.serve([(verts, faces, 128)])
         outs.append(res.fields)
     np.testing.assert_allclose(outs[0], outs[1], atol=1e-6)
+
+
+def test_sampling_independent_of_traffic_and_warmup():
+    """Surface sampling is keyed by (seed, request id): the same request id
+    samples the same cloud whether or not warmup ran or other traffic was
+    served first (this was a real bug: a shared rng made results depend on
+    queue history)."""
+    verts, faces = geo.car_surface(geo.sample_params(3))
+    v2, f2 = geo.car_surface(geo.sample_params(9))
+
+    plain = GNNServer(_cfg(), (128,), max_batch=1, seed=7)
+    [r_plain] = plain.serve([(verts, faces, 128)])
+
+    busy = GNNServer(_cfg(), (128,), max_batch=2, seed=7)
+    busy.warmup()                       # consumes no request-visible rng
+    busy.submit(verts, faces, 128)      # rid 0, same as in `plain`
+    busy.submit(v2, f2, 128)
+    res = {r.request_id: r for r in busy.flush()}
+
+    np.testing.assert_array_equal(r_plain.points, res[0].points)
+    np.testing.assert_allclose(r_plain.fields, res[0].fields, atol=1e-6)
+
+
+def _dense_overflow_geometry():
+    """90% of the surface area in one tiny triangle + a distant second
+    triangle stretching the bounding box: overflows calibrated grids."""
+    verts = np.array([[0, 0, 0], [0.3, 0, 0], [0, 0.3, 1e-3],
+                      [100, 100, 100], [100.1, 100, 100],
+                      [100, 100.1, 100.001]], np.float32)
+    faces = np.array([[0, 1, 2], [3, 4, 5]])
+    return verts, faces
+
+
+def test_overflow_rejection_path():
+    """With reject_overflow=True the guard rejects instead of serving an
+    approximate answer: Result.error set, fields NaN, stats counted."""
+    server = GNNServer(_cfg(), (512,), max_batch=2, reject_overflow=True)
+    verts, faces = _dense_overflow_geometry()
+    ok_verts, ok_faces = geo.car_surface(geo.sample_params(1))
+    import warnings as w
+    with w.catch_warnings():
+        w.simplefilter("ignore")
+        results = server.serve([(verts, faces, 512),
+                                (ok_verts, ok_faces, 512)])
+    by_id = {r.request_id: r for r in results}
+    assert by_id[0].error is not None and "overflow" in by_id[0].error
+    assert np.isnan(by_id[0].fields).all()
+    assert by_id[0].batch_size == 0
+    assert by_id[1].error is None
+    assert np.isfinite(by_id[1].fields).all()
+    assert server.stats.rejected_requests == 1
+    assert server.stats.overflow_requests == 1
+    # rejected requests record no latency
+    assert len(server.stats.latencies_s) == 1

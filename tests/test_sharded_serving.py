@@ -1,0 +1,157 @@
+"""Sharded serving (repro.graphx.sharded): shard planning invariants in the
+main process, and the multi-device equivalence suite (1/2/4/8 simulated
+host devices) via a subprocess — see ``_sharded_check.py`` for the headline
+assertions (sharded == single-device pipeline to 1e-5 on owned nodes; h =
+L-1 halos must fail)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import GNNConfig
+from repro.core import halo
+from repro.core.graph_build import sample_surface
+from repro.data import geometry as geo
+from repro.graphx import hashgrid, sharded
+from repro.graphx.multiscale import MultiscaleSpec, multiscale_edges
+from repro.graphx.pipeline import make_infer_fn
+from repro.launch.sharding import mesh_for_shards, shard_put
+from repro.models import meshgraphnet
+from test_distributed import run_script
+
+
+def _cloud(n, seed=0):
+    verts, faces = geo.car_surface(geo.sample_params(seed))
+    return sample_surface(verts, faces, n, np.random.default_rng(seed))
+
+
+def _ms(pts, levels, k):
+    grids = tuple(hashgrid.calibrate_spec(pts[:m], k, n_points=m)
+                  for m in levels)
+    return MultiscaleSpec(level_sizes=levels, k=k, grids=grids)
+
+
+def test_sharded_equivalence_multi_device():
+    """Headline: 1/2/4/8-device sharded inference == single-device pipeline
+    (and h = L-1 breaks it). Runs under 8 forced host devices."""
+    out = run_script("_sharded_check.py")
+    assert "ALL_OK" in out
+
+
+@pytest.mark.parametrize("method", ["graph", "geometric"])
+def test_plan_invariants(method):
+    levels = (64, 128, 256)
+    k, h, n_shards = 4, 3, 4
+    pts, nrm = _cloud(levels[-1], 1)
+    ms = _ms(pts, levels, k)
+    kw = ({"halo_width": sharded.global_halo_width(pts, ms)}
+          if method == "geometric" else {})
+    plan = sharded.plan_shards(pts, nrm, n_shards, h, levels, k,
+                               method=method, **kw)
+    # every global node owned exactly once
+    owned_ids = np.concatenate([plan.global_ids[p][plan.owned[p]]
+                                for p in range(n_shards)])
+    assert sorted(owned_ids.tolist()) == list(range(levels[-1]))
+    # member ids sorted by global id -> level membership is a local prefix
+    for p in range(n_shards):
+        m = plan.hop[p] < halo.HOP_PAD
+        ids = plan.global_ids[p][m]
+        assert (np.diff(ids) > 0).all()
+        for lvl, n_l in enumerate(levels):
+            assert plan.level_counts[p, lvl] == int((ids < n_l).sum())
+    # owned nodes are hop 0 (geometric rings may grant hop 0 to boundary
+    # ties of other shards — a harmless superset); graph hops are exact
+    assert (plan.hop[plan.owned] == 0).all()
+    if method == "graph":
+        assert np.array_equal(plan.owned, plan.hop == 0)
+    for p in range(n_shards):
+        sel = plan.owned[p]
+        np.testing.assert_array_equal(plan.points[p][sel],
+                                      pts[plan.global_ids[p][sel]])
+    # gather scatters owned rows back to global order
+    marker = np.arange(levels[-1], dtype=np.float32)
+    shard_out = np.zeros(plan.points.shape[:2] + (1,), np.float32)
+    for p in range(n_shards):
+        shard_out[p, :, 0] = marker[plan.global_ids[p]]
+    got = plan.gather(shard_out)
+    np.testing.assert_array_equal(got[:, 0], marker)
+
+
+def test_single_shard_equals_pipeline():
+    """P=1 sharding is the identity: same program as make_infer_fn."""
+    cfg = GNNConfig().reduced().replace(levels=(64, 128))
+    levels, k = cfg.levels, cfg.k_neighbors
+    pts, nrm = _cloud(levels[-1], 2)
+    ms = _ms(pts, levels, k)
+    params = meshgraphnet.init(jax.random.PRNGKey(0), cfg)
+    ref = np.asarray(make_infer_fn(cfg, ms)(
+        params, jnp.asarray(pts), jnp.asarray(nrm), levels[-1]))
+    plan = sharded.plan_shards(pts, nrm, 1, cfg.n_mp_layers, levels, k)
+    mesh = mesh_for_shards(1)
+    infer = sharded.make_sharded_infer_fn(cfg, plan.spec, mesh)
+    got = plan.gather(infer(params, shard_put(plan.batch(), mesh)))
+    np.testing.assert_allclose(got, ref, atol=1e-5)
+
+
+def test_frozen_spec_capacity_rejection():
+    """A request whose shards outgrow a frozen ShardSpec raises ValueError —
+    the serving rejection path."""
+    levels, k, h = (64, 128), 4, 2
+    pts, nrm = _cloud(levels[-1], 3)
+    ms = _ms(pts, levels, k)
+    w = sharded.global_halo_width(pts, ms)
+    plan = sharded.plan_shards(pts, nrm, 2, h, levels, k,
+                               method="geometric", halo_width=w)
+    tiny = sharded.ShardSpec(
+        n_shards=2, halo_hops=h,
+        ms=MultiscaleSpec(
+            level_sizes=(8, 16),
+            k=k,
+            grids=tuple(hashgrid.auto_spec(m, k) for m in (8, 16))))
+    with pytest.raises(ValueError, match="capacity"):
+        sharded.plan_shards(pts, nrm, 2, h, levels, k,
+                            method="geometric", halo_width=w, spec=tiny)
+    # and the matching spec accepts
+    again = sharded.plan_shards(pts, nrm, 2, h, levels, k,
+                                method="geometric", halo_width=w,
+                                spec=plan.spec)
+    assert again.spec is plan.spec
+
+
+def test_multiscale_vector_n_valid_matches_scalar():
+    """Per-level valid counts reduce to the scalar prefix semantics when the
+    counts are the nested prefixes."""
+    levels, k = (64, 128), 4
+    pts, _ = _cloud(levels[-1], 4)
+    ms = _ms(pts, levels, k)
+    n_valid = 100
+    s0, r0, m0 = multiscale_edges(jnp.asarray(pts), n_valid, ms)
+    vec = jnp.asarray([min(n_valid, n_l) for n_l in levels], jnp.int32)
+    s1, r1, m1 = multiscale_edges(jnp.asarray(pts), vec, ms)
+    np.testing.assert_array_equal(np.asarray(m0), np.asarray(m1))
+    np.testing.assert_array_equal(np.asarray(s0), np.asarray(s1))
+    np.testing.assert_array_equal(np.asarray(r0), np.asarray(r1))
+    with pytest.raises(ValueError, match="levels"):
+        multiscale_edges(jnp.asarray(pts), jnp.asarray([1, 2, 3]), ms)
+
+
+def test_geometric_membership_superset_of_graph():
+    """Geometric rings bound true hops from below, so geometric membership
+    (and each ring) is a superset of the graph-planned one."""
+    levels, k, h = (64, 128), 4, 2
+    pts, nrm = _cloud(levels[-1], 5)
+    ms = _ms(pts, levels, k)
+    w = sharded.global_halo_width(pts, ms)
+    pg = sharded.plan_shards(pts, nrm, 3, h, levels, k, method="graph")
+    pgeo = sharded.plan_shards(pts, nrm, 3, h, levels, k,
+                               method="geometric", halo_width=w)
+    for p in range(3):
+        g_ids = set(pg.global_ids[p][pg.hop[p] < halo.HOP_PAD].tolist())
+        geo_ids = set(pgeo.global_ids[p][pgeo.hop[p] < halo.HOP_PAD].tolist())
+        assert g_ids <= geo_ids
+        # hop lower bound node-by-node
+        ghop = dict(zip(pgeo.global_ids[p].tolist(), pgeo.hop[p].tolist()))
+        for gid, hop in zip(pg.global_ids[p][pg.hop[p] < halo.HOP_PAD].tolist(),
+                            pg.hop[p][pg.hop[p] < halo.HOP_PAD].tolist()):
+            assert ghop[gid] <= hop
