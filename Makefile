@@ -1,7 +1,7 @@
 PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: verify test bench-graph smoke
+.PHONY: verify test bench-graph bench-serve smoke
 
 # tier-1 gate: full test suite + graph-build perf smoke
 verify: test bench-graph
@@ -11,6 +11,10 @@ test:
 
 bench-graph:
 	cd benchmarks && PYTHONPATH=../src $(PY) bench_graph_build.py --smoke
+
+# serving hot path: async-vs-sync flush + aggregation impl comparison
+bench-serve:
+	cd benchmarks && PYTHONPATH=../src $(PY) bench_serve.py --smoke
 
 # quickest end-to-end signal: serving example on a reduced model
 smoke:

@@ -25,6 +25,10 @@ Usage:
 
 Emits CSV rows: name,us,derived (matching benchmarks/run.py conventions);
 ``--json`` records the dense-vs-CSR numbers in machine-readable form.
+Device timings are split warm vs cold: ``us`` is the steady-state (warm jit
+cache) median, ``cold_us`` the first call including compile — conflating
+them made the paper-scale build look 20x slower than reconstruction
+actually is.
 """
 from __future__ import annotations
 
@@ -36,7 +40,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from common import emit, timeit
+from common import emit, timeit, timeit_cold
 
 from repro.configs.base import GNNConfig
 from repro.core.graph_build import knn_edges, sample_surface
@@ -92,14 +96,16 @@ def bench_knn(sizes, k: int, rows, report):
                 idx, _, mask = hashgrid.knn(p, n, spec)
                 return hashgrid.symmetric_edges(idx, mask)
 
-            t_dev = timeit(device, jp)
+            t_cold, t_dev = timeit_cold(device, jp)
             ratio = hashgrid.max_knn_cell_ratio(pts, n, spec)
             mib = _table_mib(spec)
             rows.append((f"knn_{layout}_n{n}", t_dev,
                          f"k={k} C={spec.neigh_cap} cells={spec.n_cells} "
                          f"table_mib={mib:.2f} exact={ratio <= 1.0} "
+                         f"cold_us={t_cold:.0f} "
                          f"speedup={t_host / t_dev:.2f}x"))
-            entry[layout] = {"us": t_dev, "table_mib": mib,
+            entry[layout] = {"us": t_dev, "cold_us": t_cold,
+                             "table_mib": mib,
                              "n_cells": spec.n_cells,
                              "neigh_cap": spec.neigh_cap,
                              "exact": bool(ratio <= 1.0)}
@@ -129,16 +135,21 @@ def bench_paper_scale(k: int, rows, report, n: int = 2_000_000):
         idx, _, mask = hashgrid.knn(p, n, spec)
         return hashgrid.symmetric_edges(idx, mask)
 
-    t_dev = timeit(device, jnp.asarray(pts), warmup=1, iters=2)
+    # cold (compile + first build) and warm (steady-state rebuild) SEPARATELY:
+    # the previously recorded 31.7 s conflated the two — the compile happens
+    # once per bucket spec, the warm number is what reconstruction costs
+    t_cold, t_dev = timeit_cold(device, jnp.asarray(pts), iters=2)
     ratio = hashgrid.max_knn_cell_ratio(pts, n, spec)
     peak_rss_mib = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024
     rows.append((f"knn_csr_n{n}", t_dev,
                  f"k={k} C={spec.neigh_cap} cells={spec.n_cells} "
                  f"csr_table_mib={_table_mib(spec):.1f} "
                  f"dense_would_be_mib={_table_mib(dense_spec):.1f} "
+                 f"cold_us={t_cold:.0f} "
                  f"exact={ratio <= 1.0} peak_rss_mib={peak_rss_mib:.0f}"))
     report["paper_scale"] = {
-        "n_points": n, "us": t_dev, "exact": bool(ratio <= 1.0),
+        "n_points": n, "us": t_dev, "cold_us": t_cold,
+        "exact": bool(ratio <= 1.0),
         "n_cells": spec.n_cells, "neigh_cap": spec.neigh_cap,
         "csr_table_mib": _table_mib(spec),
         "dense_table_mib_not_allocated": _table_mib(dense_spec),
@@ -164,10 +175,11 @@ def bench_multiscale(sizes, k: int, rows):
         jp = jnp.asarray(pts)
         t_host = timeit(lambda: jax.block_until_ready(
             jnp.asarray(host()[0])))
-        t_dev = timeit(device, jp)
+        t_cold, t_dev = timeit_cold(device, jp)
         rows.append((f"multiscale_host_n{n}", t_host, f"levels={levels}"))
         rows.append((f"multiscale_device_n{n}", t_dev,
-                     f"levels={levels} speedup={t_host / t_dev:.2f}x"))
+                     f"levels={levels} cold_us={t_cold:.0f} "
+                     f"speedup={t_host / t_dev:.2f}x"))
 
 
 def bench_serve(bucket: int, n_requests: int, rows):

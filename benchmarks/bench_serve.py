@@ -1,0 +1,193 @@
+"""Serving hot-path latency/throughput bench -> BENCH_serve.json.
+
+Measures the two serving-performance levers this repo ships:
+
+  flush   sync (sample -> dispatch -> block, one batch at a time) vs the
+          async double-buffered flush (host sampling of batch i+1 overlaps
+          the in-flight XLA call of batch i). Steady-state throughput and
+          per-request p50/p95, plus the cold first request (includes the
+          bucket's one-time compile).
+  agg     processor scatter-add implementations inside the jitted
+          points->prediction pipeline: 'xla' (plain segment_sum), 'sorted'
+          (device argsort once per graph + indices_are_sorted reduce),
+          'pallas' (sorted block packing + one-hot-MXU kernel; interpret
+          mode off-TPU, so its absolute time here is NOT TPU performance).
+          Output parity vs 'xla' is recorded alongside the timings.
+
+Requests use a densely tessellated geometry (``--nu/--nv``; default ~260k
+triangles, the realistic STL regime) so host surface sampling is a real
+fraction of the request cost — that is precisely the work the async flush
+hides. Latencies are measured submit->result with all requests enqueued up
+front, so they include queue wait: p50 reflects batching delay, throughput
+reflects the pipeline. CPU-functional numbers, not TPU numbers.
+
+Usage:
+  PYTHONPATH=../src python bench_serve.py [--smoke] [--json BENCH_serve.json]
+
+Emits CSV rows (name,us,derived) like the other benches; ``--json`` writes
+the machine-readable record.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from common import emit
+
+from repro.configs.base import GNNConfig
+from repro.data import geometry as geo
+from repro.launch.serve_gnn import GNNServer
+
+
+def _requests(n_requests: int, bucket: int, nu: int, nv: int):
+    reqs = []
+    for i in range(n_requests):
+        verts, faces = geo.car_surface(geo.sample_params(i), nu=nu, nv=nv)
+        reqs.append((verts, faces, bucket))
+    return reqs
+
+
+def _steady_run(server: GNNServer, reqs, async_mode: bool) -> dict:
+    """One full drain with fresh stats; returns the stats report + results."""
+    server.stats.latencies_s = []
+    server.stats.batch_sizes = []
+    server.stats.t_serving = 0.0
+    for verts, faces, n in reqs:
+        server.submit(verts, faces, n)
+    results = server.flush(async_mode=async_mode)
+    rep = server.stats.report()
+    rep["results"] = results
+    return rep
+
+
+def bench_flush_modes(cfg, reqs, bucket, max_batch, reference, reps, rows,
+                      report):
+    """Cold first request, then sync-vs-async steady state on one server."""
+    server = GNNServer(cfg, (bucket,), max_batch=max_batch,
+                       reference=reference, check_requests=False)
+    # cold: very first request compiles the bucket's program
+    t0 = time.perf_counter()
+    [cold_res] = server.serve([reqs[0]])
+    cold_s = time.perf_counter() - t0
+    assert np.isfinite(cold_res.fields).all()
+    rows.append((f"serve_cold_b{bucket}", cold_s * 1e6, "includes compile"))
+    report["flush"] = {"cold_first_request_ms": cold_s * 1e3}
+
+    best = {}
+    for rep_i in range(reps):
+        for mode in (False, True):
+            r = _steady_run(server, reqs, async_mode=mode)
+            key = "async" if mode else "sync"
+            if key not in best or r["throughput_rps"] > \
+                    best[key]["throughput_rps"]:
+                best[key] = r
+    for key in ("sync", "async"):
+        r = best[key]
+        rows.append((f"serve_{key}_p50_b{bucket}", r["p50_ms"] * 1e3,
+                     f"p95={r['p95_ms']:.1f}ms"))
+        rows.append((f"serve_{key}_rps_b{bucket}", 0.0,
+                     f"{r['throughput_rps']:.2f}req/s"))
+        report["flush"][key] = {
+            "p50_ms": r["p50_ms"], "p95_ms": r["p95_ms"],
+            "throughput_rps": r["throughput_rps"],
+            "mean_batch": r["mean_batch"],
+        }
+    speedup = best["async"]["throughput_rps"] / \
+        max(best["sync"]["throughput_rps"], 1e-9)
+    report["flush"]["async_throughput_speedup"] = speedup
+    rows.append((f"serve_async_speedup_b{bucket}", 0.0,
+                 f"{speedup:.3f}x over sync"))
+    # (async == sync output parity on identical request ids is pinned by
+    # tests/test_serve_gnn.py::test_async_flush_matches_sync_exactly; the
+    # steady-state runs here deliberately use fresh request ids per run)
+
+
+def bench_agg_impls(cfg, reqs, bucket, max_batch, reference, impls, rows,
+                    report):
+    """Same request stream through one server per agg_impl; parity vs xla."""
+    report["agg"] = {}
+    fields_by_impl = {}
+    for impl in impls:
+        server = GNNServer(cfg, (bucket,), max_batch=max_batch,
+                           reference=reference, check_requests=False,
+                           agg_impl=impl, seed=0)
+        t0 = time.perf_counter()
+        server.warmup()
+        warmup_s = time.perf_counter() - t0
+        r = _steady_run(server, reqs, async_mode=True)
+        fields_by_impl[impl] = {x.request_id: x.fields for x in r["results"]}
+        diff = 0.0
+        if impl != "xla" and "xla" in fields_by_impl:
+            ref = fields_by_impl["xla"]
+            diff = max(float(np.abs(ref[k] - fields_by_impl[impl][k]).max())
+                       for k in ref)
+        rows.append((f"agg_{impl}_p50_b{bucket}", r["p50_ms"] * 1e3,
+                     f"warmup={warmup_s:.1f}s "
+                     f"rps={r['throughput_rps']:.2f} "
+                     f"max_abs_diff_vs_xla={diff:.2e}"))
+        report["agg"][impl] = {
+            "warmup_compile_s": warmup_s,
+            "p50_ms": r["p50_ms"], "p95_ms": r["p95_ms"],
+            "throughput_rps": r["throughput_rps"],
+            "max_abs_diff_vs_xla": diff,
+        }
+        if impl != "xla":
+            assert diff < 1e-4, f"agg_impl={impl} diverged from xla: {diff}"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes for CI (seconds, not minutes)")
+    ap.add_argument("--json", default=None,
+                    help="write the machine-readable record here")
+    ap.add_argument("--bucket", type=int, default=None)
+    ap.add_argument("--max-batch", type=int, default=2)
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--nu", type=int, default=None,
+                    help="geometry tessellation (faces ~ 2*nu*nv)")
+    ap.add_argument("--nv", type=int, default=None)
+    ap.add_argument("--reps", type=int, default=2,
+                    help="steady-state repetitions (best kept)")
+    ap.add_argument("--skip-pallas", action="store_true",
+                    help="skip the interpret-mode pallas aggregation run")
+    args = ap.parse_args()
+
+    bucket = args.bucket or (256 if args.smoke else 512)
+    n_req = args.requests or (6 if args.smoke else 16)
+    nu = args.nu or (128 if args.smoke else 512)
+    nv = args.nv or (64 if args.smoke else 256)
+    reps = 1 if args.smoke else args.reps
+    impls = ["xla", "sorted"] + ([] if args.skip_pallas else ["pallas"])
+
+    cfg = GNNConfig().reduced()
+    reqs = _requests(n_req, bucket, nu, nv)
+    reference = (reqs[0][0], reqs[0][1])
+    n_faces = len(reqs[0][1])
+
+    rows = []
+    report = {
+        "config": {
+            "bucket": bucket, "max_batch": args.max_batch,
+            "requests": n_req, "nu": nu, "nv": nv, "n_faces": n_faces,
+            "reduced": True, "backend": jax.default_backend(),
+            "smoke": bool(args.smoke),
+        },
+    }
+    bench_flush_modes(cfg, reqs, bucket, args.max_batch, reference, reps,
+                      rows, report)
+    bench_agg_impls(cfg, reqs, bucket, args.max_batch, reference, impls,
+                    rows, report)
+    emit(rows)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

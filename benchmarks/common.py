@@ -20,6 +20,18 @@ def timeit(fn, *args, warmup: int = 1, iters: int = 3) -> float:
     return float(np.median(ts) * 1e6)
 
 
+def timeit_cold(fn, *args, iters: int = 3):
+    """(cold_us, warm_us) wall times: the very first call — jit compile +
+    first execution — vs the median of ``iters`` subsequent calls. Use for
+    jitted fns where conflating the two misreads steady-state performance
+    (a 30 s "build time" that is 95% compile is a compile problem, not a
+    build problem)."""
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn(*args))
+    cold = (time.perf_counter() - t0) * 1e6
+    return float(cold), timeit(fn, *args, warmup=0, iters=iters)
+
+
 def emit(rows):
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")

@@ -62,6 +62,19 @@ def main():
     print(f"steady state: p50 {rep['p50_ms']:.0f} ms, "
           f"p95 {rep['p95_ms']:.0f} ms, {rep['throughput_rps']:.1f} req/s")
 
+    # background front-end: submit from anywhere, flush on deadline or
+    # full batch, collect by request id
+    server.start(deadline_s=0.02)
+    try:
+        verts, faces = geo.car_surface(geo.sample_params(9))
+        rid = server.submit(verts, faces, N_POINTS)
+        result = server.result(rid, timeout=60.0)
+        cp = result.fields[:, 0]
+        print(f"background req {rid}: served in {result.latency_s * 1e3:.0f} "
+              f"ms (deadline flush) | cp [{cp.min():+.2f}, {cp.max():+.2f}]")
+    finally:
+        server.stop()
+
 
 if __name__ == "__main__":
     main()

@@ -149,6 +149,11 @@ class GNNConfig:
     n_partitions: int = 21
     halo: int = 15                     # == n_mp_layers
     fourier_freqs: Tuple[float, ...] = (2.0, 4.0, 8.0)  # x pi
+    agg_impl: str = "xla"          # processor scatter-add: "xla" (plain
+                                   # segment_sum), "sorted" (device argsort
+                                   # once per graph + segment_sum with
+                                   # indices_are_sorted), "pallas" (sorted
+                                   # block packing + one-hot-MXU kernel)
     remat: bool = True             # activation checkpointing (paper SV-D)
     dtype: str = "float32"
     source: str = "arXiv X-MeshGraphNet (NVIDIA 2024)"

@@ -23,7 +23,8 @@ from repro.models import meshgraphnet
 
 def make_graph_forward(cfg: GNNConfig, *,
                        norm_in: Optional[Tuple[np.ndarray, np.ndarray]] = None,
-                       norm_out: Optional[Tuple[np.ndarray, np.ndarray]] = None):
+                       norm_out: Optional[Tuple[np.ndarray, np.ndarray]] = None,
+                       interpret: bool = True):
     """Featurize + model forward over an already-built edge set.
 
     Returns ``forward(params, points, normals, senders, receivers, emask)``
@@ -31,8 +32,12 @@ def make_graph_forward(cfg: GNNConfig, *,
     pipeline differ only in how they produce (senders, receivers, emask), so
     both wrap this one function — equivalence between them is then purely a
     property of the graphs they build.
-    Aggregation uses XLA segment_sum — the Pallas segment_agg path needs
-    host-side edge sorting and is a training-time option, not a serving one.
+    Aggregation follows ``cfg.agg_impl``: all three impls (plain ``xla``
+    scatter-add, receiver-``sorted`` segment reduce, ``pallas`` one-hot-MXU
+    kernel) run device-side inside the jitted pipeline —
+    ``segment_agg.prepare_device`` made the sort/packing jittable, so none
+    of them needs host preprocessing. ``interpret`` applies to the Pallas
+    path only (True on CPU, False on real TPUs).
     """
     in_stats = (None if norm_in is None else
                 (jnp.asarray(norm_in[0], jnp.float32),
@@ -51,7 +56,7 @@ def make_graph_forward(cfg: GNNConfig, *,
         pred = meshgraphnet.apply(params, cfg, feats, edge_feats,
                                   senders, receivers,
                                   edge_mask=emask.astype(feats.dtype),
-                                  agg_impl="xla")
+                                  interpret=interpret)
         if out_stats is not None:
             pred = pred * out_stats[1] + out_stats[0]
         return pred
@@ -70,7 +75,8 @@ def make_infer_fn(cfg: GNNConfig, ms: MultiscaleSpec, *,
     real points (a prefix). ``norm_in``/``norm_out`` are optional (mean, std)
     pairs folded into the compiled program (input encoding / output decoding).
     """
-    forward = make_graph_forward(cfg, norm_in=norm_in, norm_out=norm_out)
+    forward = make_graph_forward(cfg, norm_in=norm_in, norm_out=norm_out,
+                                 interpret=interpret)
 
     def infer(params, points, normals, n_valid):
         points = points.astype(jnp.float32)
@@ -81,12 +87,20 @@ def make_infer_fn(cfg: GNNConfig, ms: MultiscaleSpec, *,
     return jax.jit(infer) if jit else infer
 
 
-def make_batched_infer_fn(cfg: GNNConfig, ms: MultiscaleSpec, **kw):
+def make_batched_infer_fn(cfg: GNNConfig, ms: MultiscaleSpec, *,
+                          donate: bool = False, **kw):
     """vmapped variant: (params, (B, N, 3), (B, N, 3), (B,)) -> (B, N, out).
 
     All requests in a batch share the bucket's static shapes; per-request
-    sizes ride in ``n_valid``.
+    sizes ride in ``n_valid``. ``donate=True`` donates the per-batch input
+    buffers (points/normals/n_valid) to XLA so the compiled program reuses
+    their memory — they are rebuilt per request anyway. Donation is a no-op
+    on the CPU backend (XLA:CPU ignores it with a warning), so it is only
+    requested on accelerators.
     """
     kw.pop("jit", None)
     base = make_infer_fn(cfg, ms, jit=False, **kw)
-    return jax.jit(jax.vmap(base, in_axes=(None, 0, 0, 0)))
+    batched = jax.vmap(base, in_axes=(None, 0, 0, 0))
+    if donate and jax.default_backend() != "cpu":
+        return jax.jit(batched, donate_argnums=(1, 2, 3))
+    return jax.jit(batched)

@@ -332,7 +332,8 @@ def make_sharded_infer_fn(cfg: GNNConfig, sspec: ShardSpec, mesh, *,
     the halos already make every shard self-contained; the gather back to
     one cloud is ``ShardPlan.gather``.
     """
-    forward = make_graph_forward(cfg, norm_in=norm_in, norm_out=norm_out)
+    forward = make_graph_forward(cfg, norm_in=norm_in, norm_out=norm_out,
+                                 interpret=interpret)
     ms = sspec.ms
 
     def local(params, batch):

@@ -1,14 +1,26 @@
 """Jitted wrapper + preprocessing for the segment aggregation kernel.
 
-``prepare()`` runs ONCE per graph (numpy): sort edges by destination and pad
-so every node block of ``block_n`` nodes owns a fixed number EBLK of message
-rows. ``segment_sum_prepared()`` then runs per message-passing layer: an XLA
-gather (permutation) + the Pallas one-hot-matmul kernel.
+Preparation (sort edges by destination, pad so every node block of
+``block_n`` nodes owns a fixed number EBLK of message rows) runs ONCE per
+graph; ``segment_sum_prepared()`` then runs per message-passing layer: an
+XLA gather (permutation) + the Pallas one-hot-matmul kernel.
+
+Two interchangeable preparers:
+
+* ``prepare()`` — host numpy, sizes EBLK from the data (always exact);
+  the training-time path where the graph is known up front.
+* ``prepare_device()`` — pure jnp, jittable, fixed shapes: EBLK is a
+  static argument (serving buckets have static edge budgets), packing is
+  an argsort + one scatter. Runs *inside* the jitted points->prediction
+  pipeline, which is what makes ``agg_impl='pallas'`` and the sorted-XLA
+  path (``segment_sum_sorted``) usable in the serving hot path.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Optional, Union
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -59,10 +71,116 @@ def prepare(segment_ids: np.ndarray, num_segments: int,
                        n_blocks=nb, block_n=block_n, n_segments=num_segments)
 
 
-def segment_sum_prepared(prep: SegmentPrep, messages, *,
+@dataclass(frozen=True)
+class DeviceSegmentPrep:
+    """Device-side twin of :class:`SegmentPrep` (all jnp, built under jit).
+
+    ``n_dropped`` is a traced scalar: the number of edges that did not fit
+    the static ``EBLK`` budget of their node block (0 when the budget was
+    sized correctly — callers wanting exactness-no-matter-what should
+    ``lax.cond`` on it and fall back to a plain scatter-add).
+    """
+    perm: jnp.ndarray          # (NB*EBLK,) i32 indices into messages
+    perm_valid: jnp.ndarray    # (NB*EBLK, 1) f32 1=real row
+    dest_local: jnp.ndarray    # (NB*EBLK, 1) i32 in-block dest, -1 for pad
+    n_blocks: int
+    block_n: int
+    n_segments: int
+    n_dropped: jnp.ndarray     # () i32
+
+    @property
+    def pad_rows(self) -> int:
+        return int(self.perm.shape[0])
+
+
+jax.tree_util.register_dataclass(
+    DeviceSegmentPrep,
+    data_fields=["perm", "perm_valid", "dest_local", "n_dropped"],
+    meta_fields=["n_blocks", "block_n", "n_segments"])
+
+
+def default_eblk(n_edges: int, num_segments: int,
+                 block_n: int = DEFAULT_BLOCK_N, slack: float = 2.0) -> int:
+    """Static EBLK budget for ``prepare_device`` from static shapes only.
+
+    A perfectly balanced segment distribution needs ``E / NB`` rows per
+    node block; ``slack`` covers skew. Lane-rounded like ``prepare()``.
+    """
+    nb = max(1, -(-num_segments // block_n))
+    even = -(-n_edges // nb)
+    eblk = int(np.ceil(even * slack))
+    return max(128, -(-eblk // 128) * 128)
+
+
+def prepare_device(segment_ids, num_segments: int, *,
+                   block_n: int = DEFAULT_BLOCK_N,
+                   eblk: Optional[int] = None) -> DeviceSegmentPrep:
+    """Jittable ``prepare()``: argsort by segment id + one fixed-shape scatter.
+
+    Mirrors the numpy packing bit-for-bit when ``eblk`` matches (stable sort,
+    same pad conventions: perm 0 / valid 0 / dest -1 on pad rows). Unlike the
+    numpy path, EBLK is static — edges beyond a block's budget are dropped
+    and counted in ``n_dropped`` instead of growing the buffer.
+    """
+    segment_ids = jnp.asarray(segment_ids)
+    e = segment_ids.shape[0]
+    nb = max(1, -(-num_segments // block_n))
+    if eblk is None:
+        eblk = default_eblk(e, num_segments, block_n)
+    order = jnp.argsort(segment_ids, stable=True)
+    sorted_seg = segment_ids[order]
+    block_of = sorted_seg // block_n                    # nondecreasing
+    # rank of each row within its block's run of the sorted array
+    first = jnp.searchsorted(block_of, block_of, side="left")
+    rank = jnp.arange(e, dtype=first.dtype) - first
+    ok = rank < eblk
+    n_dropped = (e - ok.sum()).astype(jnp.int32)
+    # out-of-budget rows get an out-of-bounds slot; scatter mode='drop'
+    slot = jnp.where(ok, block_of * eblk + rank, nb * eblk)
+    perm = jnp.zeros((nb * eblk,), jnp.int32).at[slot].set(
+        order.astype(jnp.int32), mode="drop")
+    valid = jnp.zeros((nb * eblk, 1), jnp.float32).at[slot, 0].set(
+        1.0, mode="drop")
+    dest = jnp.full((nb * eblk, 1), -1, jnp.int32).at[slot, 0].set(
+        (sorted_seg - block_of * block_n).astype(jnp.int32), mode="drop")
+    return DeviceSegmentPrep(perm=perm, perm_valid=valid, dest_local=dest,
+                             n_blocks=nb, block_n=block_n,
+                             n_segments=num_segments, n_dropped=n_dropped)
+
+
+def sort_by_segment(segment_ids):
+    """Stable device argsort of edge->segment ids; run ONCE per graph.
+
+    Returns ``(order, sorted_ids)`` for :func:`segment_sum_sorted`.
+    """
+    segment_ids = jnp.asarray(segment_ids)
+    order = jnp.argsort(segment_ids, stable=True)
+    return order, segment_ids[order]
+
+
+def segment_sum_sorted(messages, order, sorted_ids, num_segments: int):
+    """Scatter-add over receiver-sorted messages.
+
+    ``indices_are_sorted=True`` lets XLA lower the scatter as a sorted
+    segment reduction (linear merge) instead of random-access updates — the
+    fast fully-jittable aggregation path on both CPU and TPU. Per layer this
+    is one gather (permutation) + the sorted reduce; the argsort amortizes
+    across message-passing layers via :func:`sort_by_segment`.
+    """
+    return jax.ops.segment_sum(messages[order], sorted_ids,
+                               num_segments=num_segments,
+                               indices_are_sorted=True)
+
+
+def segment_sum_prepared(prep: Union[SegmentPrep, DeviceSegmentPrep],
+                         messages, *,
                          block_d: int = DEFAULT_BLOCK_D,
                          interpret: bool = True):
-    """messages: (E, D) -> (n_segments, D) scatter-add via the Pallas kernel."""
+    """messages: (E, D) -> (n_segments, D) scatter-add via the Pallas kernel.
+
+    Accepts either preparer's output: host ``prepare()`` (numpy arrays) or
+    jittable ``prepare_device()`` (traced arrays, same field layout).
+    """
     d = messages.shape[-1]
     pad_d = -(-d // 128) * 128 if d % 128 else d
     gathered = messages[jnp.asarray(prep.perm)]

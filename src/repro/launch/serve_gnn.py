@@ -15,14 +15,37 @@ into XLA.
 
 Microbatching: submitted requests queue per bucket; ``flush`` drains up to
 ``max_batch`` same-bucket requests per step through the bucket's batched
-infer fn and records per-request latency.
+infer fn and records per-request latency. Drain order is deterministic:
+buckets are visited in ascending size, each queue FIFO — result order is
+reproducible regardless of dict insertion history or flush mode.
+
+Async double-buffered flush (the default): ``flush`` dispatches batch ``i``
+to XLA (async dispatch — the call returns as soon as the work is enqueued),
+then samples/featurizes batch ``i + 1`` on the host *while the device is
+busy*, and only then blocks on batch ``i``'s output. At steady state the
+host-side surface sampling is hidden behind device compute instead of
+serialized with it. ``async_flush=False`` restores the fully synchronous
+loop (each batch sampled, dispatched and drained before the next).
+
+Background serving: ``start(deadline_s=...)`` spawns a worker thread that
+flushes a bucket as soon as it has ``max_batch`` requests queued *or* its
+oldest request has waited ``deadline_s`` — latency-bounded microbatching.
+``submit`` is thread-safe and wakes the worker; ``result(rid)`` blocks until
+that request's prediction lands.
+
+Aggregation: the processor scatter-add follows ``cfg.agg_impl`` (``'xla'``,
+``'sorted'``, ``'pallas'`` — see ``repro.models.meshgraphnet``); all three
+run device-side inside the bucket's compiled program. ``agg_impl=`` on the
+server overrides the config per deployment.
 
 Sharded serving (``shard_devices > 1``): one request is split across devices
 instead of batching requests — RCB partitions + halo rings via
 ``repro.graphx.sharded``, each device building its own shard's graph under
 ``shard_map`` (the paper-scale 2M-point mode; see README "Sharded serving").
 Requests whose shards outgrow the bucket's frozen shard shapes are rejected
-with ``Result.error`` set, like overflow rejections.
+with ``Result.error`` set, like overflow rejections. The async flush
+pipelines host shard *planning* of request i+1 against the in-flight
+shard_map call of request i.
 
 Sampling is deterministic per (server seed, request id): resubmitting a
 request id reproduces its point cloud bit-for-bit regardless of what other
@@ -30,11 +53,12 @@ traffic (or warmup) ran before it.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve_gnn --requests 8 \
-      --buckets 512,1024 --reduced [--shard-devices 8]
+      --buckets 512,1024 --reduced [--shard-devices 8] [--ckpt ckpt.msgpack]
 """
 from __future__ import annotations
 
 import argparse
+import threading
 import time
 import warnings
 from collections import deque
@@ -59,6 +83,30 @@ def _level_sizes(n_points: int, n_levels: int) -> Tuple[int, ...]:
     """Nested prefix sizes n/2^(L-1) ... n (the paper's 500k/1M/2M pattern)."""
     return tuple(n_points // (2 ** (n_levels - 1 - i))
                  for i in range(n_levels))
+
+
+def load_gnn_checkpoint(path: str):
+    """Read a ``repro.ckpt`` GNN checkpoint (as written by ``launch.train``).
+
+    Returns ``(params, norm_in, norm_out)`` with the normalizer stats as
+    (mean, std) numpy pairs, ready for ``GNNServer(params=..., norm_in=...,
+    norm_out=...)`` — the input encoding / output decoding fold into each
+    bucket's compiled program.
+    """
+    from repro.ckpt import checkpoint as ckpt
+    tree = ckpt.restore(path)
+    if "params" not in tree:
+        raise ValueError(f"{path} is not a GNN training checkpoint "
+                         "(missing 'params')")
+
+    def stats(d):
+        if d is None:
+            return None
+        return (np.asarray(d["mean"], np.float32),
+                np.asarray(d["std"], np.float32))
+
+    return (tree["params"], stats(tree.get("norm_in")),
+            stats(tree.get("norm_out")))
 
 
 @dataclass
@@ -115,25 +163,60 @@ class ServerStats:
         }
 
 
+@dataclass
+class _InFlight:
+    """One dispatched batch: host bookkeeping + the un-synced device output.
+
+    Created by ``_dispatch`` (which returns before the XLA call finishes —
+    async dispatch), consumed by ``_harvest`` (which blocks). ``results``
+    carries rejections resolved at prepare time, in submission order.
+    """
+    bucket: Bucket
+    results: List[Result]
+    ok_reqs: List[Request]
+    out: object                        # device array, or None (all rejected)
+    pts: np.ndarray                    # host copy of the sampled clouds
+    record: bool
+    plan: object = None                # sharded mode: the ShardPlan
+
+
 class GNNServer:
     """Batched multi-geometry inference with padding buckets.
 
-    ``params`` defaults to randomly initialized weights (functional serving
-    path; checkpoint loading plugs in here).
+    ``params`` defaults to randomly initialized weights; pass trained
+    weights directly or load them with :meth:`from_checkpoint`.
+    ``async_flush`` selects the double-buffered flush loop (host sampling
+    overlapped with the in-flight XLA call); ``agg_impl`` overrides
+    ``cfg.agg_impl`` for the processor scatter-add.
     """
 
     def __init__(self, cfg: GNNConfig, bucket_sizes: Sequence[int] = (1024,),
                  *, params=None, max_batch: int = 4, n_levels: int = 3,
-                 knn_impl: str = "xla", interpret: bool = True,
+                 knn_impl: str = "xla", agg_impl: Optional[str] = None,
+                 interpret: bool = True,
                  norm_in=None, norm_out=None, seed: int = 0,
                  reference=None, check_requests: bool = True,
                  reject_overflow: bool = False, shard_devices: int = 1,
-                 shard_pad_factor: float = 1.3):
+                 shard_pad_factor: float = 1.3, async_flush: bool = True,
+                 donate: bool = True):
+        if agg_impl is not None:
+            cfg = cfg.replace(agg_impl=agg_impl)
+        if cfg.agg_impl == "pallas" and int(shard_devices) == 1:
+            # the batched pipeline vmaps the exactness lax.cond into a
+            # select, which executes BOTH the kernel and its fallback every
+            # layer; the kernel path is meant for the unbatched per-shard
+            # pipeline (shard_devices > 1) or training
+            warnings.warn(
+                "agg_impl='pallas' under the batched (vmapped) serving "
+                "path runs both the kernel and the scatter-add fallback "
+                "per layer — use it with shard_devices > 1, or prefer "
+                "'sorted'/'xla' here")
         self.cfg = cfg
         self.max_batch = int(max_batch)
         self.check_requests = check_requests
         self.reject_overflow = reject_overflow
         self.shard_devices = int(shard_devices)
+        self.async_flush = bool(async_flush)
         self.params = params if params is not None else meshgraphnet.init(
             jax.random.PRNGKey(seed), cfg)
         self.seed = int(seed)
@@ -141,6 +224,14 @@ class GNNServer:
         self._buckets: Dict[int, Bucket] = {}
         self.stats = ServerStats()
         self._next_id = 0
+        self._cond = threading.Condition()
+        self._serve_lock = threading.Lock()
+        self._done: Dict[int, Result] = {}
+        self._done_cap = 4096
+        self._waiting: set = set()        # rids with a blocked result() call
+        self._worker: Optional[threading.Thread] = None
+        self._stop_flag = False
+        self._deadline_s = 0.0
         self._mesh = (mesh_for_shards(self.shard_devices)
                       if self.shard_devices > 1 else None)
         # grid specs are calibrated from a reference geometry representative
@@ -179,9 +270,19 @@ class GNNServer:
                 infer = make_batched_infer_fn(cfg, ms, knn_impl=knn_impl,
                                               interpret=interpret,
                                               norm_in=norm_in,
-                                              norm_out=norm_out)
+                                              norm_out=norm_out,
+                                              donate=donate)
                 self._buckets[n] = Bucket(n_points=n, ms=ms, infer=infer)
             self._queues[n] = deque()
+
+    @classmethod
+    def from_checkpoint(cls, path: str, cfg: GNNConfig,
+                        bucket_sizes: Sequence[int] = (1024,), **kw):
+        """Serve trained weights: load params + normalizer stats from a
+        ``launch.train`` checkpoint (the ROADMAP checkpoint-loading item)."""
+        params, norm_in, norm_out = load_gnn_checkpoint(path)
+        return cls(cfg, bucket_sizes, params=params,
+                   norm_in=norm_in, norm_out=norm_out, **kw)
 
     # ------------------------------------------------------------- request IO
 
@@ -196,13 +297,20 @@ class GNNServer:
 
     def submit(self, verts: np.ndarray, faces: np.ndarray,
                n_points: Optional[int] = None) -> int:
-        """Enqueue a geometry; returns the request id."""
-        rid = self._next_id
-        self._next_id += 1
-        req = Request(verts=np.asarray(verts, np.float32),
-                      faces=np.asarray(faces), request_id=rid,
-                      n_points=n_points, t_submit=time.perf_counter())
-        self._queues[self.bucket_for(n_points)].append(req)
+        """Enqueue a geometry; returns the request id. Thread-safe; wakes
+        the background worker (if running)."""
+        # geometry copies can be multi-MB: do them OUTSIDE the lock so
+        # producers never stall waiters / the worker on an array copy
+        verts = np.asarray(verts, np.float32)
+        faces = np.asarray(faces)
+        bucket = self.bucket_for(n_points)    # _buckets is frozen post-init
+        with self._cond:
+            rid = self._next_id
+            self._next_id += 1
+            self._queues[bucket].append(
+                Request(verts=verts, faces=faces, request_id=rid,
+                        n_points=n_points, t_submit=time.perf_counter()))
+            self._cond.notify_all()
         return rid
 
     def pending(self) -> int:
@@ -260,42 +368,18 @@ class GNNServer:
                       latency_s=t - (req.t_submit or t), bucket=b.n_points,
                       batch_size=0, error=reason)
 
-    def _run_sharded(self, b: Bucket, reqs, samples,
-                     record: bool) -> List[Result]:
-        """One shard_map call per request: the batch axis is the shard axis."""
-        results = []
-        for req, (pts, nrm) in zip(reqs, samples):
-            try:
-                plan = sharded.plan_shards(
-                    pts, nrm, self.shard_devices, self.cfg.n_mp_layers,
-                    b.ms.level_sizes, self.cfg.k_neighbors,
-                    method="geometric",
-                    halo_width=sharded.global_halo_width(pts, b.ms),
-                    spec=b.sspec)
-            except ValueError as e:
-                results.append(self._reject(req, b, str(e), pts, record))
-                continue
-            out = b.shard_infer(self.params,
-                                shard_put(plan.batch(), self._mesh))
-            fields = plan.gather(np.asarray(jax.block_until_ready(out)))
-            t_done = time.perf_counter()
-            lat = t_done - (req.t_submit or t_done)
-            results.append(Result(request_id=req.request_id, points=pts,
-                                  fields=fields, latency_s=lat,
-                                  bucket=b.n_points, batch_size=1))
-            if record:
-                self.stats.latencies_s.append(lat)
-                self.stats.batch_sizes.append(1)
-                b.served += 1
-        return results
+    # ------------------------------------------- prepare / dispatch / harvest
 
-    def _run_batch(self, b: Bucket, reqs: List[Request],
-                   record: bool = True) -> List[Result]:
-        n = b.n_points
+    def _prepare(self, b: Bucket, reqs: List[Request], record: bool):
+        """Host stage: sample surfaces + run OOD checks; resolve rejections.
+
+        Pure host numpy — in the async flush this is the work that overlaps
+        the previous batch's in-flight XLA call.
+        """
         results: List[Result] = []
         ok_reqs, samples = [], []
         for req in reqs:
-            pts, nrm = self._sample(req, n)
+            pts, nrm = self._sample(req, b.n_points)
             dropped = 0
             if record and self.check_requests:
                 dropped = self._check_cloud(b, pts, req.request_id)
@@ -307,12 +391,41 @@ class GNNServer:
                 continue
             ok_reqs.append(req)
             samples.append((pts, nrm))
+        return results, ok_reqs, samples
+
+    def _dispatch(self, b: Bucket, pre: List[Result], ok_reqs: List[Request],
+                  samples, record: bool) -> _InFlight:
+        """Device stage: pad, transfer, enqueue the XLA call; NO blocking.
+
+        Returns immediately with the un-synced output array (JAX async
+        dispatch) so the caller can do host work for the next batch while
+        this one runs.
+        """
         if not ok_reqs:
-            return results
+            return _InFlight(bucket=b, results=pre, ok_reqs=[], out=None,
+                             pts=np.zeros((0,)), record=record)
         if b.sspec is not None:
-            return results + self._run_sharded(b, ok_reqs, samples, record)
+            # sharded: one request per dispatch (batch axis == shard axis)
+            assert len(ok_reqs) == 1
+            (pts, nrm), req = samples[0], ok_reqs[0]
+            try:
+                plan = sharded.plan_shards(
+                    pts, nrm, self.shard_devices, self.cfg.n_mp_layers,
+                    b.ms.level_sizes, self.cfg.k_neighbors,
+                    method="geometric",
+                    halo_width=sharded.global_halo_width(pts, b.ms),
+                    spec=b.sspec)
+            except ValueError as e:
+                pre = pre + [self._reject(req, b, str(e), pts, record)]
+                return _InFlight(bucket=b, results=pre, ok_reqs=[], out=None,
+                                 pts=pts, record=record)
+            out = b.shard_infer(self.params,
+                                shard_put(plan.batch(), self._mesh))
+            return _InFlight(bucket=b, results=pre, ok_reqs=[req], out=out,
+                             pts=pts, record=record, plan=plan)
         # static batcher: always pad to max_batch rows so each bucket
         # compiles exactly once regardless of how full the microbatch is
+        n = b.n_points
         rows = max(self.max_batch, len(ok_reqs))
         pts = np.zeros((rows, n, 3), np.float32)
         nrm = np.zeros((rows, n, 3), np.float32)
@@ -320,41 +433,271 @@ class GNNServer:
             pts[i], nrm[i] = p, m
         for i in range(len(ok_reqs), rows):  # pad rows replay the last request
             pts[i], nrm[i] = pts[len(ok_reqs) - 1], nrm[len(ok_reqs) - 1]
-        out = b.infer(self.params, jnp.asarray(pts), jnp.asarray(nrm),
+        # explicit H2D put: the transfer belongs to this batch's device
+        # timeline, and donation lets XLA reuse the buffers (off-CPU)
+        dev_pts = jax.device_put(pts)
+        dev_nrm = jax.device_put(nrm)
+        out = b.infer(self.params, dev_pts, dev_nrm,
                       jnp.full((rows,), n, jnp.int32))
-        out = np.asarray(jax.block_until_ready(out))
-        t_done = time.perf_counter()
-        for i, req in enumerate(ok_reqs):
+        return _InFlight(bucket=b, results=pre, ok_reqs=ok_reqs, out=out,
+                         pts=pts, record=record)
+
+    def _harvest(self, fl: _InFlight) -> List[Result]:
+        """Sync stage: block on the device output, build Results, record."""
+        results = list(fl.results)
+        if fl.out is None:
+            return results
+        b, record = fl.bucket, fl.record
+        out = np.asarray(jax.block_until_ready(fl.out))
+        if b.sspec is not None:
+            [req] = fl.ok_reqs
+            # the host-side gather back into one cloud is part of what the
+            # client waits for — stamp completion after it
+            fields = fl.plan.gather(out)
+            t_done = time.perf_counter()
             lat = t_done - (req.t_submit or t_done)
-            results.append(Result(request_id=req.request_id, points=pts[i],
+            results.append(Result(request_id=req.request_id, points=fl.pts,
+                                  fields=fields, latency_s=lat,
+                                  bucket=b.n_points, batch_size=1))
+            if record:
+                self.stats.latencies_s.append(lat)
+                self.stats.batch_sizes.append(1)
+                b.served += 1
+            return results
+        t_done = time.perf_counter()
+        for i, req in enumerate(fl.ok_reqs):
+            lat = t_done - (req.t_submit or t_done)
+            results.append(Result(request_id=req.request_id, points=fl.pts[i],
                                   fields=out[i], latency_s=lat,
-                                  bucket=n, batch_size=len(ok_reqs)))
+                                  bucket=b.n_points,
+                                  batch_size=len(fl.ok_reqs)))
             if record:
                 self.stats.latencies_s.append(lat)
         if record:
-            self.stats.batch_sizes.append(len(ok_reqs))
-            b.served += len(ok_reqs)
+            self.stats.batch_sizes.append(len(fl.ok_reqs))
+            b.served += len(fl.ok_reqs)
         return results
 
-    def flush(self) -> List[Result]:
-        """Drain every queue, up to ``max_batch`` requests per XLA call."""
-        t0 = time.perf_counter()
-        results: List[Result] = []
-        for n, q in self._queues.items():
+    def _run_batch(self, b: Bucket, reqs: List[Request],
+                   record: bool = True) -> List[Result]:
+        """Synchronous prepare -> dispatch -> harvest of one batch."""
+        pre, ok_reqs, samples = self._prepare(b, reqs, record)
+        return self._harvest(self._dispatch(b, pre, ok_reqs, samples, record))
+
+    # ------------------------------------------------------------- flushing
+
+    def _drain_plan(self, ready_only: bool = False
+                    ) -> List[Tuple[Bucket, List[Request]]]:
+        """Pop queued requests into (bucket, batch) work items.
+
+        Deterministic order: ascending bucket size, FIFO within a bucket.
+        ``ready_only`` keeps batches that are full (``max_batch``) or whose
+        oldest request has exceeded the background deadline; the final
+        partial batch of a bucket stays queued until its deadline expires.
+        """
+        now = time.perf_counter()
+        plan: List[Tuple[Bucket, List[Request]]] = []
+        for n in sorted(self._queues):
+            q = self._queues[n]
+            b = self._buckets[n]
+            width = 1 if b.sspec is not None else self.max_batch
             while q:
-                batch = []
-                while q and len(batch) < self.max_batch:
-                    batch.append(q.popleft())
-                results.extend(self._run_batch(self._buckets[n], batch))
-        self.stats.t_serving += time.perf_counter() - t0
+                expired = now - q[0].t_submit >= self._deadline_s
+                if ready_only and len(q) < width and not expired:
+                    break
+                plan.append((b, [q.popleft()
+                                 for _ in range(min(len(q), width))]))
+        return plan
+
+    def _item_error(self, b: Bucket, batch: List[Request],
+                    e: Exception) -> _InFlight:
+        """Turn one failed work item into error Results (background mode)."""
+        res = [self._reject(req, b, f"serving error: {e!r}",
+                            np.zeros((0, 3), np.float32), True)
+               for req in batch]
+        return _InFlight(bucket=b, results=res, ok_reqs=[], out=None,
+                         pts=np.zeros((0,)), record=True)
+
+    def _run_plan(self, plan, async_mode: bool,
+                  errors_as_results: bool = False) -> List[Result]:
+        """Execute drained work items; async mode double-buffers.
+
+        Async loop order per item j: prepare(j) [host] -> dispatch(j)
+        [enqueue] -> harvest(j-1) [block]. While batch j-1 is in flight on
+        the device, the host samples batch j — the overlap that hides
+        sampling latency at steady state. At most two batches are in the
+        XLA queue at once.
+
+        ``errors_as_results`` (background worker): a failure is contained
+        to ITS work item — that batch's requests come back as error
+        Results, every other batch completes normally. Foreground flushes
+        keep raising so callers see the exception.
+        """
+        results: List[Result] = []
+        with self._serve_lock:
+            t0 = time.perf_counter()
+            if not async_mode:
+                for b, batch in plan:
+                    try:
+                        results.extend(self._run_batch(b, batch))
+                    except Exception as e:
+                        if not errors_as_results:
+                            raise
+                        results.extend(self._item_error(b, batch, e).results)
+            else:
+                inflight: Optional[_InFlight] = None
+                for b, batch in plan:
+                    try:
+                        pre, ok, samples = self._prepare(b, batch, True)
+                        nxt = self._dispatch(b, pre, ok, samples, True)
+                    except Exception as e:
+                        if not errors_as_results:
+                            raise
+                        nxt = self._item_error(b, batch, e)
+                    if inflight is not None:
+                        results.extend(self._harvest_guarded(
+                            inflight, errors_as_results))
+                    inflight = nxt
+                if inflight is not None:
+                    results.extend(self._harvest_guarded(
+                        inflight, errors_as_results))
+            self.stats.t_serving += time.perf_counter() - t0
         return results
+
+    def _harvest_guarded(self, fl: _InFlight,
+                         errors_as_results: bool) -> List[Result]:
+        try:
+            return self._harvest(fl)
+        except Exception as e:
+            if not errors_as_results:
+                raise
+            return list(fl.results) + \
+                self._item_error(fl.bucket, fl.ok_reqs, e).results
+
+    def flush(self, *, async_mode: Optional[bool] = None) -> List[Result]:
+        """Drain every queue, up to ``max_batch`` requests per XLA call.
+
+        ``async_mode`` overrides the server's ``async_flush`` default.
+        Results come back in deterministic drain order either way.
+        Incompatible with a running background worker — a foreground flush
+        would steal queued requests whose results ``result()`` waiters are
+        blocked on, so it raises instead.
+        """
+        self._assert_no_worker()
+        with self._cond:
+            plan = self._drain_plan()
+        return self._run_plan(plan, self.async_flush
+                              if async_mode is None else async_mode)
+
+    def _assert_no_worker(self):
+        if self._worker is not None:
+            raise RuntimeError(
+                "flush()/serve() while the background worker is running "
+                "would steal its queued requests; use submit()/result(), "
+                "or stop() the worker first")
 
     def serve(self, requests: Sequence[Tuple[np.ndarray, np.ndarray,
                                              Optional[int]]]) -> List[Result]:
-        """Submit + flush a stream of (verts, faces, n_points) requests."""
+        """Submit + flush a stream of (verts, faces, n_points) requests.
+
+        Guarded against a running background worker BEFORE submitting —
+        otherwise the rejected call would still have leaked its requests
+        into the worker's queues.
+        """
+        self._assert_no_worker()
         for verts, faces, n_points in requests:
             self.submit(verts, faces, n_points)
         return self.flush()
+
+    # ------------------------------------------------- background front-end
+
+    def start(self, deadline_s: float = 0.02, result_cap: int = 4096):
+        """Spawn the background flush worker (deadline-based microbatching).
+
+        A bucket is flushed as soon as it holds ``max_batch`` requests or
+        its oldest request is ``deadline_s`` old — the knob trades per-
+        request latency against batch efficiency. Use ``submit`` +
+        ``result`` from any thread; ``stop()`` drains and joins.
+
+        Finished results wait in a bounded buffer (``result_cap``); if a
+        client never collects (fire-and-forget submits, timed-out
+        ``result`` calls), the oldest uncollected results are evicted
+        instead of leaking point clouds forever.
+        """
+        if self._worker is not None:
+            raise RuntimeError("background worker already running")
+        self._deadline_s = float(deadline_s)
+        self._done_cap = max(int(result_cap), 1)
+        self._stop_flag = False
+        self._worker = threading.Thread(target=self._serve_loop, daemon=True)
+        self._worker.start()
+
+    def stop(self):
+        """Stop the worker after draining everything still queued."""
+        if self._worker is None:
+            return
+        with self._cond:
+            self._stop_flag = True
+            self._cond.notify_all()
+        self._worker.join()
+        self._worker = None
+
+    def result(self, request_id: int, timeout: Optional[float] = None
+               ) -> Result:
+        """Block until the background worker finishes ``request_id``."""
+        deadline = None if timeout is None else time.perf_counter() + timeout
+        with self._cond:
+            self._waiting.add(request_id)     # shield from buffer eviction
+            try:
+                while request_id not in self._done:
+                    rem = None if deadline is None else \
+                        deadline - time.perf_counter()
+                    if rem is not None and rem <= 0:
+                        raise TimeoutError(f"request {request_id} not done "
+                                           f"within {timeout}s")
+                    self._cond.wait(timeout=rem)
+                return self._done.pop(request_id)
+            finally:
+                self._waiting.discard(request_id)
+
+    def _serve_loop(self):
+        while True:
+            with self._cond:
+                plan = self._drain_plan(ready_only=not self._stop_flag)
+                if not plan:
+                    if self._stop_flag:
+                        return
+                    # sleep until the oldest pending request's deadline
+                    # (or a submit/stop notification)
+                    oldest = min((q[0].t_submit
+                                  for q in self._queues.values() if q),
+                                 default=None)
+                    wait = None if oldest is None else max(
+                        self._deadline_s - (time.perf_counter() - oldest),
+                        1e-4)
+                    self._cond.wait(timeout=wait)
+                    continue
+            # per-item errors become error Results inside _run_plan; the
+            # outer except is a last resort so an infrastructural failure
+            # still cannot kill the thread and hang every waiter
+            try:
+                results = self._run_plan(plan, self.async_flush,
+                                         errors_as_results=True)
+            except Exception as e:
+                results = [self._reject(req, b, f"serving error: {e!r}",
+                                        np.zeros((0, 3), np.float32), True)
+                           for b, batch in plan for req in batch]
+            with self._cond:
+                for r in results:
+                    self._done[r.request_id] = r
+                # evict oldest UNWAITED results beyond the cap — a result
+                # someone is blocked on must survive until they collect it
+                for rid in list(self._done):
+                    if len(self._done) <= self._done_cap:
+                        break
+                    if rid not in self._waiting:
+                        self._done.pop(rid)
+                self._cond.notify_all()
 
 
 def main():
@@ -364,6 +707,15 @@ def main():
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--knn-impl", default="xla", choices=["xla", "pallas"])
+    ap.add_argument("--agg-impl", default=None,
+                    choices=["xla", "sorted", "pallas"],
+                    help="processor scatter-add implementation "
+                    "(default: the config's, i.e. 'xla')")
+    ap.add_argument("--sync", action="store_true",
+                    help="disable the async double-buffered flush")
+    ap.add_argument("--ckpt", default=None,
+                    help="serve trained weights + normalizer stats from a "
+                    "launch.train checkpoint")
     ap.add_argument("--shard-devices", type=int, default=1,
                     help="split each request across this many devices "
                     "(requires that many jax devices, e.g. via "
@@ -374,9 +726,14 @@ def main():
     if args.reduced:
         cfg = cfg.reduced()
     buckets = tuple(int(b) for b in args.buckets.split(","))
-    server = GNNServer(cfg, buckets, max_batch=args.max_batch,
-                       knn_impl=args.knn_impl,
-                       shard_devices=args.shard_devices)
+    kw = dict(max_batch=args.max_batch, knn_impl=args.knn_impl,
+              agg_impl=args.agg_impl, shard_devices=args.shard_devices,
+              async_flush=not args.sync)
+    if args.ckpt:
+        server = GNNServer.from_checkpoint(args.ckpt, cfg, buckets, **kw)
+        print(f"loaded checkpoint {args.ckpt}")
+    else:
+        server = GNNServer(cfg, buckets, **kw)
     t0 = time.perf_counter()
     server.warmup()
     print(f"warmup (compile {len(buckets)} buckets): "

@@ -37,7 +37,9 @@ from repro.optim.adam import AdamConfig, adam_init, adam_update
 
 def train_gnn(cfg: GNNConfig, steps: int, n_samples: int,
               ckpt_path: str | None = None, log_every: int = 10,
-              agg_impl: str = "xla"):
+              agg_impl: str | None = None):
+    if agg_impl is not None:
+        cfg = cfg.replace(agg_impl=agg_impl)
     train, test, norm_in, norm_out = pipe.build_dataset(cfg, n_samples)
     psamples = [pipe.partition_sample(cfg, s, norm_in, norm_out)
                 for s in train]

@@ -5,9 +5,13 @@ and node updates, MLPs with trailing LayerNorm) -> decoder. All normalization
 is feature-local (LayerNorm) — batch statistics would break the partition
 equivalence (paper SIII-A) and are deliberately unsupported.
 
-The processor aggregation (scatter-add of messages) has two implementations:
-``agg_impl='xla'`` uses ``jax.ops.segment_sum``; ``agg_impl='pallas'`` uses the
-TPU kernel in ``repro.kernels.segment_agg`` (scatter-as-one-hot-MXU-matmul).
+The processor aggregation (scatter-add of messages) has three jittable
+implementations, selected by ``cfg.agg_impl`` (or the ``agg_impl`` argument):
+``'xla'`` is plain ``jax.ops.segment_sum``; ``'sorted'`` argsorts edges by
+receiver once per graph and reduces with ``indices_are_sorted=True``;
+``'pallas'`` packs the sorted edges into fixed node blocks and runs the TPU
+kernel in ``repro.kernels.segment_agg`` (scatter-as-one-hot-MXU-matmul).
+The per-graph sort/packing happens once, outside the layer scan.
 """
 from __future__ import annotations
 
@@ -40,24 +44,77 @@ def init(key, cfg: GNNConfig, dtype=jnp.float32):
     }
 
 
-def _aggregate(messages, receivers, n_nodes: int, agg_impl: str):
+def make_aggregator(receivers, n_nodes: int, agg_impl: str, *,
+                    interpret: bool = True):
+    """Build ``agg(messages) -> (n_nodes, D)`` once per graph.
+
+    The per-graph preprocessing (device argsort for ``'sorted'``, sorted
+    block packing for ``'pallas'``) happens HERE, outside the layer scan, so
+    its cost amortizes over every message-passing step. All three impls are
+    fully jittable — ``receivers`` may be a tracer.
+
+    ``'pallas'`` packs edges into a static per-node-block budget
+    (``default_eblk``); if a pathological graph overflows it, a ``lax.cond``
+    falls back to the plain scatter-add, so the result is always exact.
+    Note the cond is on traced data: under ``vmap`` it lowers to a select
+    that executes BOTH branches — the pallas path is meant for the
+    unbatched pipelines (per-shard ``shard_map`` serving, training), where
+    it stays a true branch. Callers with masked edge buffers should spread
+    the padding edges' segment ids (see ``apply``) so the budget holds and
+    the fallback stays cold.
+    """
+    if agg_impl == "sorted":
+        from repro.kernels.segment_agg import ops as segops
+        order, sorted_ids = segops.sort_by_segment(receivers)
+        return lambda msgs: segops.segment_sum_sorted(
+            msgs, order, sorted_ids, n_nodes)
     if agg_impl == "pallas":
         from repro.kernels.segment_agg import ops as segops
-        return segops.segment_sum(messages, receivers, n_nodes)
-    return jax.ops.segment_sum(messages, receivers, num_segments=n_nodes)
+        prep = segops.prepare_device(receivers, n_nodes)
+
+        def agg(msgs):
+            return jax.lax.cond(
+                prep.n_dropped > 0,
+                lambda m: jax.ops.segment_sum(m, receivers,
+                                              num_segments=n_nodes),
+                lambda m: segops.segment_sum_prepared(
+                    prep, m, interpret=interpret),
+                msgs)
+        return agg
+    if agg_impl != "xla":
+        raise ValueError(f"unknown agg_impl {agg_impl!r} "
+                         "(expected 'xla' | 'sorted' | 'pallas')")
+    return lambda msgs: jax.ops.segment_sum(msgs, receivers,
+                                            num_segments=n_nodes)
 
 
 def apply(params, cfg: GNNConfig, node_feats, edge_feats, senders, receivers,
           edge_mask: Optional[jnp.ndarray] = None,
-          agg_impl: str = "xla"):
+          agg_impl: Optional[str] = None, interpret: bool = True):
     """Forward pass on one (sub)graph.
 
     node_feats: (N, node_in); edge_feats: (E, edge_in);
     senders/receivers: (E,) int32; edge_mask: (E,) 1.0 for real edges.
+    ``agg_impl`` overrides ``cfg.agg_impl`` (None -> use the config);
+    ``interpret`` only affects the Pallas aggregation path.
     Returns (N, node_out).
     """
     n_nodes = node_feats.shape[0]
     act = cfg.act
+    impl = agg_impl or cfg.agg_impl
+    agg_receivers = receivers
+    if impl == "pallas" and edge_mask is not None:
+        # padding edge slots all carry receiver 0 (the fixed-shape edge
+        # union's convention), which would pile every masked slot into node
+        # block 0 and overflow the static EBLK budget at real bucket sizes.
+        # Their messages are zeroed before aggregation, so scatter them
+        # uniformly across segments instead — zero contribution anywhere,
+        # and the packing budget sees balanced load.
+        n_edges = receivers.shape[0]
+        spread = (jnp.arange(n_edges, dtype=receivers.dtype) % n_nodes)
+        agg_receivers = jnp.where(edge_mask.astype(bool), receivers, spread)
+    aggregate = make_aggregator(agg_receivers, n_nodes, impl,
+                                interpret=interpret)
     h = nn.mlp(params["node_encoder"], node_feats, act)
     e = nn.mlp(params["edge_encoder"], edge_feats, act)
     if edge_mask is not None:
@@ -70,7 +127,7 @@ def apply(params, cfg: GNNConfig, node_feats, edge_feats, senders, receivers,
         e_new = e + nn.mlp(pe, msg_in, act)
         if edge_mask is not None:
             e_new = e_new * edge_mask[:, None]
-        agg = _aggregate(e_new, receivers, n_nodes, agg_impl)
+        agg = aggregate(e_new)
         h_new = h + nn.mlp(pn, jnp.concatenate([h, agg], axis=-1), act)
         return (h_new, e_new), None
 
@@ -97,7 +154,8 @@ def masked_mse(pred, target, mask, denom=None):
     return se / denom
 
 
-def loss_fn(params, cfg: GNNConfig, batch, denom=None, agg_impl: str = "xla"):
+def loss_fn(params, cfg: GNNConfig, batch, denom=None,
+            agg_impl: Optional[str] = None):
     """batch keys: node_feats, edge_feats, senders, receivers, targets,
     loss_mask (owned nodes), optional edge_mask."""
     pred = apply(params, cfg, batch["node_feats"], batch["edge_feats"],

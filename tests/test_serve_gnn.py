@@ -1,9 +1,13 @@
-"""GNN serving driver: padding buckets, microbatching, request bookkeeping."""
+"""GNN serving driver: padding buckets, microbatching, request bookkeeping,
+async double-buffered flush, background deadline serving, checkpoint
+loading."""
 import numpy as np
+import pytest
 
 from repro.configs.base import GNNConfig
 from repro.data import geometry as geo
-from repro.launch.serve_gnn import GNNServer, _level_sizes
+from repro.launch.serve_gnn import (GNNServer, _level_sizes,
+                                    load_gnn_checkpoint)
 
 
 def _cfg():
@@ -174,3 +178,275 @@ def test_overflow_rejection_path():
     assert server.stats.overflow_requests == 1
     # rejected requests record no latency
     assert len(server.stats.latencies_s) == 1
+
+
+# ---------------------------------------------------------------------------
+# async double-buffered flush + background deadline serving
+# ---------------------------------------------------------------------------
+
+def _mixed_requests():
+    reqs = []
+    for i, n in [(0, 100), (1, 256), (2, 128), (3, 64), (4, 200)]:
+        verts, faces = geo.car_surface(geo.sample_params(i))
+        reqs.append((verts, faces, n))
+    return reqs
+
+
+def test_flush_drain_order_deterministic():
+    """Buckets drain in ascending size (FIFO within a bucket) no matter the
+    construction/submission order — async result ordering is reproducible."""
+    # bucket sizes handed over in descending order on purpose
+    server = GNNServer(_cfg(), (256, 128), max_batch=2, seed=0)
+    results = server.serve(_mixed_requests())
+    # bucket 128 first (rids 0, 2, 3 FIFO in batches of 2), then 256 (1, 4)
+    assert [r.request_id for r in results] == [0, 2, 3, 1, 4]
+    assert [r.bucket for r in results] == [128, 128, 128, 256, 256]
+    assert server.stats.batch_sizes == [2, 1, 2]
+
+
+def test_async_flush_matches_sync_exactly():
+    """The double-buffered flush changes scheduling, not results: same
+    fields, same result order, same recorded batch sizes as the fully
+    synchronous loop."""
+    outs = {}
+    for mode in (False, True):
+        server = GNNServer(_cfg(), (128, 256), max_batch=2, seed=7,
+                           async_flush=mode)
+        outs[mode] = (server.serve(_mixed_requests()),
+                      server.stats.batch_sizes)
+    assert outs[True][1] == outs[False][1]
+    for a, b in zip(outs[True][0], outs[False][0]):
+        assert a.request_id == b.request_id
+        assert a.bucket == b.bucket
+        np.testing.assert_allclose(a.fields, b.fields, atol=1e-6)
+
+
+def test_async_flush_rejection_ordering():
+    """Rejections resolved at prepare time still come back interleaved in
+    drain order under the async flush."""
+    import warnings as w
+    server = GNNServer(_cfg(), (512,), max_batch=2, reject_overflow=True,
+                       async_flush=True)
+    bad_verts, bad_faces = _dense_overflow_geometry()
+    ok_verts, ok_faces = geo.car_surface(geo.sample_params(1))
+    with w.catch_warnings():
+        w.simplefilter("ignore")
+        results = server.serve([(bad_verts, bad_faces, 512),
+                                (ok_verts, ok_faces, 512)])
+    assert [r.request_id for r in results] == [0, 1]
+    assert results[0].error is not None and np.isnan(results[0].fields).all()
+    assert results[1].error is None and np.isfinite(results[1].fields).all()
+
+
+def test_flush_mode_override_per_call():
+    server = GNNServer(_cfg(), (128,), max_batch=2, async_flush=True)
+    verts, faces = geo.car_surface(geo.sample_params(0))
+    server.submit(verts, faces, 128)
+    [r_sync] = server.flush(async_mode=False)
+    server2 = GNNServer(_cfg(), (128,), max_batch=2, async_flush=True)
+    server2.submit(verts, faces, 128)
+    [r_async] = server2.flush()
+    np.testing.assert_allclose(r_sync.fields, r_async.fields, atol=1e-6)
+
+
+def test_background_deadline_flush():
+    """A lone request (queue < max_batch) is served once its deadline
+    expires; a full batch goes immediately; stop() drains leftovers."""
+    server = GNNServer(_cfg(), (128,), max_batch=4, seed=7)
+    server.warmup()
+    server.start(deadline_s=0.02)
+    verts, faces = geo.car_surface(geo.sample_params(0))
+    try:
+        rid = server.submit(verts, faces, 128)
+        res = server.result(rid, timeout=30.0)
+        assert res.request_id == rid and np.isfinite(res.fields).all()
+        assert res.batch_size == 1            # deadline fired, not max_batch
+        rids = [server.submit(verts, faces, 128) for _ in range(4)]
+        out = [server.result(r, timeout=30.0) for r in rids]
+        assert all(o.batch_size == 4 for o in out)
+    finally:
+        server.stop()
+    assert server.pending() == 0
+
+
+def test_background_matches_foreground_results():
+    """Background serving is keyed by (seed, rid) like everything else:
+    identical predictions to a plain flush of the same request ids."""
+    verts, faces = geo.car_surface(geo.sample_params(3))
+    plain = GNNServer(_cfg(), (128,), max_batch=1, seed=7)
+    [want] = plain.serve([(verts, faces, 128)])
+
+    server = GNNServer(_cfg(), (128,), max_batch=1, seed=7)
+    server.start(deadline_s=0.01)
+    try:
+        rid = server.submit(verts, faces, 128)
+        got = server.result(rid, timeout=30.0)
+    finally:
+        server.stop()
+    np.testing.assert_array_equal(want.points, got.points)
+    np.testing.assert_allclose(want.fields, got.fields, atol=1e-6)
+
+
+def test_background_result_timeout():
+    server = GNNServer(_cfg(), (128,), max_batch=1)
+    with pytest.raises(TimeoutError):
+        server.result(999, timeout=0.01)
+    with pytest.raises(RuntimeError):
+        server.start()
+        server.start()
+    server.stop()
+
+
+# ---------------------------------------------------------------------------
+# agg_impl knob + checkpoint loading
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("impl", ["sorted", "pallas"])
+def test_server_agg_impl_matches_default(impl):
+    """The server-level aggregation override changes the compiled program,
+    not the answer. (Unsharded pallas additionally warns: the vmapped cond
+    runs both branches, so it is a functional — not fast — path here.)"""
+    import warnings as w
+    verts, faces = geo.car_surface(geo.sample_params(2))
+    base = GNNServer(_cfg(), (128,), max_batch=1, seed=3)
+    [want] = base.serve([(verts, faces, 128)])
+    with w.catch_warnings(record=True) as caught:
+        w.simplefilter("always")
+        fast = GNNServer(_cfg(), (128,), max_batch=1, seed=3, agg_impl=impl)
+    warned = any("vmapped" in str(c.message) for c in caught)
+    assert warned == (impl == "pallas")
+    assert fast.cfg.agg_impl == impl
+    [got] = fast.serve([(verts, faces, 128)])
+    np.testing.assert_allclose(got.fields, want.fields, rtol=1e-5, atol=1e-5)
+
+
+def test_from_checkpoint_serves_trained_weights(tmp_path):
+    """from_checkpoint must use the checkpoint's params AND fold its
+    normalizer stats into the program: with identity input stats and affine
+    output stats, predictions are exactly std * plain + mean."""
+    import jax
+    from repro.ckpt import checkpoint as ckpt
+    from repro.models import meshgraphnet
+
+    cfg = _cfg()
+    params = meshgraphnet.init(jax.random.PRNGKey(42), cfg)
+    norm_in = {"mean": np.zeros((1, cfg.node_in), np.float32),
+               "std": np.ones((1, cfg.node_in), np.float32)}
+    norm_out = {"mean": np.full((1, cfg.node_out), 5.0, np.float32),
+                "std": np.full((1, cfg.node_out), 2.0, np.float32)}
+    path = str(tmp_path / "ckpt.msgpack")
+    ckpt.save(path, {"params": params, "norm_in": norm_in,
+                     "norm_out": norm_out})
+
+    loaded_params, li, lo = load_gnn_checkpoint(path)
+    np.testing.assert_array_equal(li[0], norm_in["mean"])
+    np.testing.assert_array_equal(lo[1], norm_out["std"])
+
+    verts, faces = geo.car_surface(geo.sample_params(4))
+    plain = GNNServer(cfg, (128,), max_batch=1, seed=7, params=params)
+    [want] = plain.serve([(verts, faces, 128)])
+    served = GNNServer.from_checkpoint(path, cfg, (128,), max_batch=1,
+                                       seed=7)
+    [got] = served.serve([(verts, faces, 128)])
+    np.testing.assert_allclose(got.fields, 2.0 * want.fields + 5.0,
+                               rtol=1e-5, atol=1e-5)
+    # and they are the checkpoint's weights, not a fresh init
+    fresh = GNNServer(cfg, (128,), max_batch=1, seed=7)
+    [other] = fresh.serve([(verts, faces, 128)])
+    assert not np.allclose(got.fields, other.fields, atol=1e-4)
+
+
+def test_load_gnn_checkpoint_rejects_non_gnn(tmp_path):
+    from repro.ckpt import checkpoint as ckpt
+    path = str(tmp_path / "bad.msgpack")
+    ckpt.save(path, {"weights": np.zeros((2, 2))})
+    with pytest.raises(ValueError, match="missing 'params'"):
+        load_gnn_checkpoint(path)
+
+
+def test_flush_refused_while_background_worker_runs():
+    """A foreground flush would steal queued requests out from under
+    result() waiters -> explicit error instead of a silent TimeoutError."""
+    server = GNNServer(_cfg(), (128,), max_batch=2)
+    server.start(deadline_s=10.0)
+    verts, faces = geo.car_surface(geo.sample_params(0))
+    try:
+        server.submit(verts, faces, 128)
+        with pytest.raises(RuntimeError, match="background worker"):
+            server.flush()
+        with pytest.raises(RuntimeError, match="background worker"):
+            server.serve([(verts, faces, 128)])
+    finally:
+        server.stop()
+
+
+def test_background_result_buffer_bounded():
+    """Uncollected results are evicted oldest-first beyond result_cap —
+    fire-and-forget submits must not leak point clouds forever."""
+    server = GNNServer(_cfg(), (128,), max_batch=1, seed=0)
+    server.warmup()
+    server.start(deadline_s=0.005, result_cap=2)
+    verts, faces = geo.car_surface(geo.sample_params(0))
+    try:
+        rids = [server.submit(verts, faces, 128) for _ in range(4)]
+        # wait for the newest to land; the buffer then holds at most 2
+        server.result(rids[-1], timeout=60.0)
+    finally:
+        server.stop()
+    assert len(server._done) <= 2
+    with pytest.raises(TimeoutError):
+        server.result(rids[0], timeout=0.01)   # evicted
+
+
+def test_background_worker_survives_bad_request():
+    """A geometry that blows up host-side (face indices out of range) must
+    come back as an error Result — not kill the worker thread, not leave
+    result() waiters hanging, and not block later good requests."""
+    server = GNNServer(_cfg(), (128,), max_batch=1, seed=0)
+    server.warmup()
+    server.start(deadline_s=0.005)
+    verts, faces = geo.car_surface(geo.sample_params(0))
+    bad_faces = np.array([[0, 1, 10_000_000]])   # out-of-range vertex id
+    try:
+        bad = server.submit(verts, bad_faces, 128)
+        res = server.result(bad, timeout=60.0)
+        assert res.error is not None and "serving error" in res.error
+        good = server.submit(verts, faces, 128)   # worker still alive
+        ok = server.result(good, timeout=60.0)
+        assert ok.error is None and np.isfinite(ok.fields).all()
+    finally:
+        server.stop()
+
+
+def test_serve_guard_runs_before_submitting():
+    """serve() during background mode must reject WITHOUT enqueuing —
+    otherwise the worker would process the rejected call's requests."""
+    server = GNNServer(_cfg(), (128,), max_batch=4)
+    server.start(deadline_s=30.0)      # long deadline: nothing auto-flushes
+    verts, faces = geo.car_surface(geo.sample_params(0))
+    try:
+        with pytest.raises(RuntimeError, match="background worker"):
+            server.serve([(verts, faces, 128)])
+        assert server.pending() == 0   # nothing leaked into the queues
+    finally:
+        server.stop()
+
+
+def test_background_worker_isolates_failures_per_batch():
+    """A bad request drained in the SAME plan as a good one must not poison
+    the good one: the failure is contained to its own work item."""
+    server = GNNServer(_cfg(), (128,), max_batch=1, seed=0)
+    server.warmup()
+    verts, faces = geo.car_surface(geo.sample_params(0))
+    bad_faces = np.array([[0, 1, 10_000_000]])   # out-of-range vertex id
+    # submit BEFORE start so the first wake drains both items in one plan
+    bad = server.submit(verts, bad_faces, 128)
+    good = server.submit(verts, faces, 128)
+    server.start(deadline_s=0.005)
+    try:
+        ok = server.result(good, timeout=60.0)
+        err = server.result(bad, timeout=60.0)
+    finally:
+        server.stop()
+    assert err.error is not None and "serving error" in err.error
+    assert ok.error is None and np.isfinite(ok.fields).all()
