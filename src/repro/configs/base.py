@@ -154,6 +154,17 @@ class GNNConfig:
                                    # once per graph + segment_sum with
                                    # indices_are_sorted), "pallas" (sorted
                                    # block packing + one-hot-MXU kernel)
+    # serving: padding-bucket autoscaling (repro.launch.serve_gnn). Active
+    # when bucket_policy == "auto" or the server gets bucket_sizes="auto";
+    # the ladder is then derived from the observed request-size histogram
+    # (quantile refits) and grown on demand for oversize traffic, with the
+    # compiled-program cache bounded by max_live_buckets (LRU eviction).
+    bucket_policy: str = "static"      # "static" | "auto"
+    max_live_buckets: int = 8          # compiled-program cache bound (auto)
+    bucket_granularity: int = 64       # auto bucket sizes round UP to this
+    bucket_quantiles: Tuple[float, ...] = (0.5, 0.9)  # refit ladder targets
+    bucket_refit_every: int = 32       # submits between ladder refits
+    bucket_hist_len: int = 1024        # request-size histogram window
     remat: bool = True             # activation checkpointing (paper SV-D)
     dtype: str = "float32"
     source: str = "arXiv X-MeshGraphNet (NVIDIA 2024)"

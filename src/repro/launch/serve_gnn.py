@@ -9,9 +9,30 @@ jitted, vmapped XLA program per padding bucket.
 
 Padding buckets: request sizes are quantized to a small set of point counts
 (e.g. 1k/4k/16k). Each bucket owns static graph shapes (levels, edge buffer,
-grid spec) calibrated once at server start from a reference geometry, so the
-jit cache is warm after one compile per bucket and request shapes never leak
-into XLA.
+grid spec) calibrated once from a reference geometry, so the jit cache is
+warm after one compile per bucket and request shapes never leak into XLA.
+
+Autoscaling buckets (``bucket_sizes="auto"`` / ``--buckets auto``): instead
+of a static ladder the server derives bucket sizes from the observed
+request-size distribution. Every submit feeds an online histogram; every
+``cfg.bucket_refit_every`` submits a quantile refit (``cfg.bucket_quantiles``,
+rounded up to ``cfg.bucket_granularity``) adds tighter ladder targets, and a
+request larger than every known size *grows* the ladder on the spot — an
+oversize request is never downsampled under auto. Buckets are calibrated and
+compiled on demand the first time traffic routes to them (the same
+reference-geometry calibration path as a static ladder), and the compiled-
+program cache is bounded: beyond ``cfg.max_live_buckets`` the least-recently-
+used idle bucket is evicted and transparently rebuilt (recompiled) if its
+size becomes hot again. ``ServerStats`` records the cache behavior
+(``bucket_hits``/``bucket_misses``/``bucket_evictions``/``bucket_compiles``,
+``grown_buckets``) and the padding waste (``padding_waste_frac``). Auto mode
+is gated to unsharded serving — the sharded path freezes per-shard shapes at
+init, so it requires a static ladder.
+
+Oversize requests on a *static* ladder are never silently truncated either:
+the request is served at the largest bucket with a warning and an
+``oversize_requests`` stat, or rejected with ``Result.error`` under
+``reject_overflow=True``.
 
 Microbatching: submitted requests queue per bucket; ``flush`` drains up to
 ``max_batch`` same-bucket requests per step through the bucket's batched
@@ -54,6 +75,8 @@ traffic (or warmup) ran before it.
 Usage:
   PYTHONPATH=src python -m repro.launch.serve_gnn --requests 8 \
       --buckets 512,1024 --reduced [--shard-devices 8] [--ckpt ckpt.msgpack]
+  PYTHONPATH=src python -m repro.launch.serve_gnn --requests 8 \
+      --buckets auto --reduced        # traffic-derived autoscaling ladder
 """
 from __future__ import annotations
 
@@ -63,7 +86,7 @@ import time
 import warnings
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -115,8 +138,9 @@ class Bucket:
     n_points: int
     ms: MultiscaleSpec
     infer: object                      # jitted batched fn (unsharded mode)
-    compiles: int = 0
+    compiles: int = 0                  # ACTUAL XLA compiles (jit cache growth)
     served: int = 0
+    last_used: int = 0                 # LRU tick (autoscaler eviction order)
     sspec: Optional[sharded.ShardSpec] = None   # sharded mode only
     shard_infer: object = None                  # jitted shard_map fn
 
@@ -143,24 +167,70 @@ class Result:
 
 @dataclass
 class ServerStats:
+    """Serving counters. Mutations and :meth:`report` both synchronize on
+    ``lock`` — the background worker appends while clients introspect, so
+    ``report`` snapshots under the lock instead of iterating live lists."""
     latencies_s: List[float] = field(default_factory=list)
     batch_sizes: List[int] = field(default_factory=list)
     t_serving: float = 0.0
     overflow_requests: int = 0         # clouds that exceeded a grid's cap
     rejected_requests: int = 0         # returned with Result.error set
+    oversize_requests: int = 0         # asked for more than the static ladder
+    bucket_hits: int = 0               # served by an already-live bucket
+    bucket_misses: int = 0             # bucket had to be (re)built
+    bucket_evictions: int = 0          # cold compiled programs dropped (LRU)
+    bucket_compiles: int = 0           # actual XLA compiles across buckets
+    grown_buckets: int = 0             # ladder sizes added for oversize asks
+    padding_points: int = 0            # computed-but-unrequested points
+    requested_points: int = 0          # points actually asked for
+    lock: threading.Lock = field(default_factory=threading.Lock,
+                                 repr=False, compare=False)
+
+    def reset(self):
+        """Zero every counter (keeps the lock); used between bench phases."""
+        with self.lock:
+            self.latencies_s = []
+            self.batch_sizes = []
+            self.t_serving = 0.0
+            self.overflow_requests = 0
+            self.rejected_requests = 0
+            self.oversize_requests = 0
+            self.bucket_hits = 0
+            self.bucket_misses = 0
+            self.bucket_evictions = 0
+            self.bucket_compiles = 0
+            self.grown_buckets = 0
+            self.padding_points = 0
+            self.requested_points = 0
 
     def report(self) -> dict:
-        lat = np.asarray(self.latencies_s) if self.latencies_s else \
-            np.zeros((1,))
-        return {
-            "requests": len(self.latencies_s),
+        with self.lock:                # snapshot: the worker may be appending
+            lats = list(self.latencies_s)
+            batches = list(self.batch_sizes)
+            t_serving = self.t_serving
+            counters = {
+                "overflow_requests": self.overflow_requests,
+                "rejected_requests": self.rejected_requests,
+                "oversize_requests": self.oversize_requests,
+                "bucket_hits": self.bucket_hits,
+                "bucket_misses": self.bucket_misses,
+                "bucket_evictions": self.bucket_evictions,
+                "bucket_compiles": self.bucket_compiles,
+                "grown_buckets": self.grown_buckets,
+            }
+            padded = self.padding_points
+            requested = self.requested_points
+        lat = np.asarray(lats) if lats else np.zeros((1,))
+        rep = {
+            "requests": len(lats),
             "p50_ms": float(np.percentile(lat, 50) * 1e3),
             "p95_ms": float(np.percentile(lat, 95) * 1e3),
-            "mean_batch": float(np.mean(self.batch_sizes))
-            if self.batch_sizes else 0.0,
-            "throughput_rps": len(self.latencies_s) /
-            max(self.t_serving, 1e-9),
+            "mean_batch": float(np.mean(batches)) if batches else 0.0,
+            "throughput_rps": len(lats) / max(t_serving, 1e-9),
+            "padding_waste_frac": padded / max(padded + requested, 1),
         }
+        rep.update(counters)
+        return rep
 
 
 @dataclass
@@ -171,7 +241,7 @@ class _InFlight:
     async dispatch), consumed by ``_harvest`` (which blocks). ``results``
     carries rejections resolved at prepare time, in submission order.
     """
-    bucket: Bucket
+    bucket: Optional[Bucket]           # None on all-rejected error items
     results: List[Result]
     ok_reqs: List[Request]
     out: object                        # device array, or None (all rejected)
@@ -188,9 +258,16 @@ class GNNServer:
     ``async_flush`` selects the double-buffered flush loop (host sampling
     overlapped with the in-flight XLA call); ``agg_impl`` overrides
     ``cfg.agg_impl`` for the processor scatter-add.
+
+    ``bucket_sizes`` is either a static ladder of point counts or the
+    string ``"auto"``: the autoscaler then starts with an empty ladder and
+    derives bucket sizes from traffic (see the module docstring). Passing a
+    ladder together with ``cfg.bucket_policy == "auto"`` seeds the
+    autoscaler with those sizes. The auto policy is unsharded-only.
     """
 
-    def __init__(self, cfg: GNNConfig, bucket_sizes: Sequence[int] = (1024,),
+    def __init__(self, cfg: GNNConfig,
+                 bucket_sizes: Union[str, Sequence[int]] = (1024,),
                  *, params=None, max_batch: int = 4, n_levels: int = 3,
                  knn_impl: str = "xla", agg_impl: Optional[str] = None,
                  interpret: bool = True,
@@ -211,17 +288,46 @@ class GNNServer:
                 "path runs both the kernel and the scatter-add fallback "
                 "per layer — use it with shard_devices > 1, or prefer "
                 "'sorted'/'xla' here")
+        if cfg.bucket_policy not in ("static", "auto"):
+            raise ValueError(
+                f"cfg.bucket_policy must be 'static' or 'auto', "
+                f"got {cfg.bucket_policy!r}")
+        self.auto = bucket_sizes == "auto" or cfg.bucket_policy == "auto"
+        if self.auto and int(shard_devices) > 1:
+            raise ValueError(
+                "autoscaling buckets (bucket_sizes='auto') are gated to "
+                "unsharded serving: the sharded path freezes per-shard "
+                "shapes at init — pass a static ladder with "
+                "shard_devices > 1")
+        seed_sizes = () if bucket_sizes == "auto" else \
+            tuple(sorted(int(b) for b in bucket_sizes))
+        if not self.auto and not seed_sizes:
+            raise ValueError("a static server needs at least one bucket "
+                             "size (or pass bucket_sizes='auto')")
         self.cfg = cfg
         self.max_batch = int(max_batch)
+        self.n_levels = int(n_levels)
         self.check_requests = check_requests
         self.reject_overflow = reject_overflow
         self.shard_devices = int(shard_devices)
+        self.shard_pad_factor = shard_pad_factor
         self.async_flush = bool(async_flush)
         self.params = params if params is not None else meshgraphnet.init(
             jax.random.PRNGKey(seed), cfg)
         self.seed = int(seed)
+        self._knn_impl = knn_impl
+        self._interpret = interpret
+        self._norm_in = norm_in
+        self._norm_out = norm_out
+        self._donate = donate
         self._queues: Dict[int, deque] = {}
         self._buckets: Dict[int, Bucket] = {}
+        self._ladder: set = set(seed_sizes)   # target sizes (incl. not-live)
+        self._size_hist: deque = deque(maxlen=max(int(cfg.bucket_hist_len),
+                                                  1))
+        self._refit_count = 0
+        self._tick = 0                        # LRU clock for bucket eviction
+        self._plan_sizes: set = set()         # sizes in the active drain plan
         self.stats = ServerStats()
         self._next_id = 0
         self._cond = threading.Condition()
@@ -239,61 +345,188 @@ class GNNServer:
         ref_verts, ref_faces = reference if reference is not None else \
             geo.car_surface(geo.sample_params(0))
         self._reference = (ref_verts, ref_faces)
-        for n in sorted(bucket_sizes):
-            levels = _level_sizes(n, n_levels)
-            # one-time host calibration on a reference cloud: the only
-            # cKDTree use in the server, never in the request path
-            ref_pts, ref_nrm = sample_surface(ref_verts, ref_faces, n,
-                                              np.random.default_rng(0))
-            grids = tuple(hashgrid.calibrate_spec(ref_pts[:m],
-                                                  cfg.k_neighbors,
-                                                  n_points=m)
-                          for m in levels)
-            ms = MultiscaleSpec(level_sizes=levels, k=cfg.k_neighbors,
-                                grids=grids)
-            if self.shard_devices > 1:
-                # freeze per-shard shapes/grids from the reference plan;
-                # per-request planning is then cKDTree-free geometric numpy
-                ref_plan = sharded.plan_shards(
-                    ref_pts, ref_nrm, self.shard_devices, cfg.n_mp_layers,
-                    levels, cfg.k_neighbors, method="geometric",
-                    halo_width=sharded.global_halo_width(ref_pts, ms),
-                    pad_factor=shard_pad_factor)
-                sspec = ref_plan.spec
-                shard_infer = sharded.make_sharded_infer_fn(
-                    cfg, sspec, self._mesh, knn_impl=knn_impl,
-                    interpret=interpret, norm_in=norm_in, norm_out=norm_out)
-                self._buckets[n] = Bucket(n_points=n, ms=ms, infer=None,
-                                          sspec=sspec,
-                                          shard_infer=shard_infer)
-            else:
-                infer = make_batched_infer_fn(cfg, ms, knn_impl=knn_impl,
-                                              interpret=interpret,
-                                              norm_in=norm_in,
-                                              norm_out=norm_out,
-                                              donate=donate)
-                self._buckets[n] = Bucket(n_points=n, ms=ms, infer=infer)
+        for n in seed_sizes:
+            self._buckets[n] = self._build_bucket(n)
             self._queues[n] = deque()
+
+    def _build_bucket(self, n: int) -> Bucket:
+        """Calibrate + wire one padding bucket.
+
+        One-time host calibration on a reference cloud — the only cKDTree
+        use in the server, never in the request path. The XLA compile
+        itself happens lazily on the bucket's first dispatch and is counted
+        in ``Bucket.compiles`` / ``ServerStats.bucket_compiles``.
+        """
+        cfg = self.cfg
+        ref_verts, ref_faces = self._reference
+        levels = _level_sizes(n, self.n_levels)
+        ref_pts, ref_nrm = sample_surface(ref_verts, ref_faces, n,
+                                          np.random.default_rng(0))
+        grids = tuple(hashgrid.calibrate_spec(ref_pts[:m], cfg.k_neighbors,
+                                              n_points=m)
+                      for m in levels)
+        ms = MultiscaleSpec(level_sizes=levels, k=cfg.k_neighbors,
+                            grids=grids)
+        if self.shard_devices > 1:
+            # freeze per-shard shapes/grids from the reference plan;
+            # per-request planning is then cKDTree-free geometric numpy
+            ref_plan = sharded.plan_shards(
+                ref_pts, ref_nrm, self.shard_devices, cfg.n_mp_layers,
+                levels, cfg.k_neighbors, method="geometric",
+                halo_width=sharded.global_halo_width(ref_pts, ms),
+                pad_factor=self.shard_pad_factor)
+            sspec = ref_plan.spec
+            shard_infer = sharded.make_sharded_infer_fn(
+                cfg, sspec, self._mesh, knn_impl=self._knn_impl,
+                interpret=self._interpret, norm_in=self._norm_in,
+                norm_out=self._norm_out)
+            return Bucket(n_points=n, ms=ms, infer=None, sspec=sspec,
+                          shard_infer=shard_infer)
+        infer = make_batched_infer_fn(cfg, ms, knn_impl=self._knn_impl,
+                                      interpret=self._interpret,
+                                      norm_in=self._norm_in,
+                                      norm_out=self._norm_out,
+                                      donate=self._donate)
+        return Bucket(n_points=n, ms=ms, infer=infer)
 
     @classmethod
     def from_checkpoint(cls, path: str, cfg: GNNConfig,
-                        bucket_sizes: Sequence[int] = (1024,), **kw):
+                        bucket_sizes: Union[str, Sequence[int]] = (1024,),
+                        **kw):
         """Serve trained weights: load params + normalizer stats from a
-        ``launch.train`` checkpoint (the ROADMAP checkpoint-loading item)."""
+        ``launch.train`` checkpoint (the ROADMAP checkpoint-loading item).
+        ``bucket_sizes`` accepts ``"auto"`` like the constructor."""
         params, norm_in, norm_out = load_gnn_checkpoint(path)
         return cls(cfg, bucket_sizes, params=params,
                    norm_in=norm_in, norm_out=norm_out, **kw)
 
-    # ------------------------------------------------------------- request IO
+    # ------------------------------------------------- bucket ladder / cache
+
+    def _round_up(self, n: int) -> int:
+        g = max(int(self.cfg.bucket_granularity), 1)
+        return ((max(int(n), 1) + g - 1) // g) * g
+
+    def ladder(self) -> Tuple[int, ...]:
+        """Live bucket sizes (calibrated, program compiled or pending)."""
+        with self._cond:
+            return tuple(sorted(self._buckets))
+
+    def target_ladder(self) -> Tuple[int, ...]:
+        """Every size requests can route to: live buckets + refit targets."""
+        with self._cond:
+            return tuple(sorted(set(self._buckets) | self._ladder))
 
     def bucket_for(self, n_points: Optional[int]) -> int:
-        sizes = sorted(self._buckets)
-        if n_points is None:
-            return sizes[-1]
-        for s in sizes:
-            if n_points <= s:
+        """Pure routing query: which ladder size would serve ``n_points``?
+
+        No side effects — the submit path routes through :meth:`_route`,
+        which additionally grows the auto ladder for oversize asks or (on a
+        static ladder) warns and counts ``stats.oversize_requests``.
+        """
+        return self._route(n_points, mutate=False)
+
+    def _route(self, n_points: Optional[int], mutate: bool) -> int:
+        """Route a requested resolution to a ladder size.
+
+        Static ladder: smallest bucket that fits; an oversize ask warns,
+        counts ``stats.oversize_requests`` and returns the largest bucket
+        (the request is later rejected instead under ``reject_overflow``).
+        Auto: an oversize ask GROWS the ladder — a new bucket of
+        ``_round_up(n_points)`` is calibrated+compiled when first drained.
+        ``mutate=False`` (the public :meth:`bucket_for`) answers the same
+        question without growing, warning or counting.
+        """
+        with self._cond:
+            sizes = sorted(set(self._buckets) | self._ladder)
+            if n_points is None:
+                if sizes:
+                    return sizes[-1]
+                n_points = 1024               # auto + empty ladder: bootstrap
+            for s in sizes:
+                if n_points <= s:
+                    return s
+            if self.auto:
+                # check-and-grow atomically so concurrent submits of the
+                # same oversize ask add (and count) the new size once
+                s = self._round_up(n_points)
+                if mutate and s not in self._ladder:
+                    self._ladder.add(s)
+                    with self.stats.lock:
+                        self.stats.grown_buckets += 1
                 return s
+        if not mutate:
+            return sizes[-1]
+        with self.stats.lock:
+            self.stats.oversize_requests += 1
+        if self.reject_overflow:
+            warnings.warn(
+                f"request for {n_points} points exceeds the largest bucket "
+                f"({sizes[-1]}) and will be REJECTED (reject_overflow is "
+                "set); use bucket_sizes='auto' to grow the ladder instead")
+        else:
+            warnings.warn(
+                f"request for {n_points} points exceeds the largest bucket "
+                f"({sizes[-1]}): serving a DOWNSAMPLED {sizes[-1]}-point "
+                "cloud. Pass reject_overflow=True to reject oversize "
+                "requests, or bucket_sizes='auto' to let the ladder grow "
+                "instead")
         return sizes[-1]
+
+    def _refit_ladder_locked(self):
+        """Quantile refit (holding ``_cond``): retarget the ladder to the
+        observed size distribution, keeping the current max for coverage."""
+        if not self._size_hist:
+            return
+        hist = np.asarray(self._size_hist)
+        targets = {self._round_up(int(np.quantile(hist, q)))
+                   for q in self.cfg.bucket_quantiles}
+        if self._ladder:
+            targets.add(max(self._ladder))    # never shrink oversize coverage
+        cap = max(int(self.cfg.max_live_buckets), 1)
+        self._ladder = set(sorted(targets)[-cap:])
+
+    def _ensure_bucket(self, n: int) -> Bucket:
+        """Compiled-program cache lookup: hit bumps LRU recency, miss builds
+        the bucket (reference calibration + lazy compile) and, in auto mode,
+        evicts the least-recently-used idle bucket beyond the cache bound.
+
+        "Idle" means no queued requests AND not part of the drain plan being
+        executed right now — a bucket whose batch was already popped into
+        the active plan has an empty queue but is about to serve, and
+        evicting it would force a pointless rebuild+recompile one item
+        later. The cap is therefore soft within a single plan.
+        """
+        with self._cond:
+            b = self._buckets.get(n)
+            if b is not None:
+                self._tick += 1
+                b.last_used = self._tick
+                with self.stats.lock:
+                    self.stats.bucket_hits += 1
+                return b
+        with self.stats.lock:
+            self.stats.bucket_misses += 1
+        b = self._build_bucket(n)             # slow host work: outside _cond
+        with self._cond:
+            self._tick += 1
+            b.last_used = self._tick
+            self._buckets[n] = b
+            self._queues.setdefault(n, deque())
+            if self.auto:
+                cap = max(int(self.cfg.max_live_buckets), 1)
+                while len(self._buckets) > cap:
+                    idle = [s for s in self._buckets
+                            if s != n and not self._queues.get(s)
+                            and s not in self._plan_sizes]
+                    if not idle:
+                        break                 # everything else has traffic
+                    victim = min(idle,
+                                 key=lambda s: self._buckets[s].last_used)
+                    del self._buckets[victim]
+                    self._queues.pop(victim, None)
+                    with self.stats.lock:
+                        self.stats.bucket_evictions += 1
+        return b
 
     def submit(self, verts: np.ndarray, faces: np.ndarray,
                n_points: Optional[int] = None) -> int:
@@ -303,39 +536,54 @@ class GNNServer:
         # producers never stall waiters / the worker on an array copy
         verts = np.asarray(verts, np.float32)
         faces = np.asarray(faces)
-        bucket = self.bucket_for(n_points)    # _buckets is frozen post-init
+        bucket = self._route(n_points, mutate=True)   # auto mode may grow
         with self._cond:
             rid = self._next_id
             self._next_id += 1
-            self._queues[bucket].append(
+            self._queues.setdefault(bucket, deque()).append(
                 Request(verts=verts, faces=faces, request_id=rid,
                         n_points=n_points, t_submit=time.perf_counter()))
+            if self.auto:
+                self._size_hist.append(bucket if n_points is None
+                                       else int(n_points))
+                self._refit_count += 1
+                if self._refit_count >= max(int(self.cfg.bucket_refit_every),
+                                            1):
+                    self._refit_count = 0
+                    self._refit_ladder_locked()
             self._cond.notify_all()
         return rid
 
     def pending(self) -> int:
-        return sum(len(q) for q in self._queues.values())
+        # snapshot under the lock: the worker pops/evicts queues concurrently
+        with self._cond:
+            return sum(len(q) for q in self._queues.values())
 
     # ------------------------------------------------------------- serving
 
     def warmup(self):
-        """Compile each bucket's program on a dummy batch (max_batch wide).
+        """Compile each live bucket's program on a dummy batch.
 
         Uses the calibration reference geometry so the dummy request always
         fits the frozen shapes; a warmup rejection (possible only if the
         reference itself cannot be planned, i.e. misconfiguration) is
-        surfaced instead of silently skipping the compile.
+        surfaced instead of silently skipping the compile. ``Bucket.compiles``
+        counts ACTUAL jit-cache growth — calling ``warmup`` twice compiles
+        (and counts) once. Under ``bucket_sizes="auto"`` with no seed ladder
+        there is nothing to warm yet; buckets compile on first traffic.
         """
         verts, faces = self._reference
         width = 1 if self.shard_devices > 1 else self.max_batch
-        for n, b in self._buckets.items():
-            batch = [Request(verts, faces, -1, n)] * width
-            results = self._run_batch(b, batch, record=False)
-            errs = [r.error for r in results if r.error is not None]
-            if errs:
-                raise RuntimeError(
-                    f"warmup failed for bucket {n}: {errs[0]}")
-            b.compiles += 1
+        with self._serve_lock:
+            with self._cond:
+                buckets = [self._buckets[n] for n in sorted(self._buckets)]
+            for b in buckets:
+                batch = [Request(verts, faces, -1, b.n_points)] * width
+                results = self._run_batch(b, batch, record=False)
+                errs = [r.error for r in results if r.error is not None]
+                if errs:
+                    raise RuntimeError(
+                        f"warmup failed for bucket {b.n_points}: {errs[0]}")
 
     def _sample(self, req: Request, n: int):
         # deterministic per (server seed, request id): independent of what
@@ -350,7 +598,8 @@ class GNNServer:
         dropped = sum(hashgrid.overflow_count(pts[:m], m, g)
                       for m, g in zip(b.ms.level_sizes, b.ms.grids))
         if dropped:
-            self.stats.overflow_requests += 1
+            with self.stats.lock:
+                self.stats.overflow_requests += 1
             warnings.warn(
                 f"request {rid}: geometry overflows bucket {b.n_points}'s "
                 f"calibrated grid ({dropped} candidate slots dropped) — "
@@ -358,14 +607,15 @@ class GNNServer:
                 "with a representative reference geometry")
         return dropped
 
-    def _reject(self, req: Request, b: Bucket, reason: str,
+    def _reject(self, req: Request, n_points: int, reason: str,
                 pts: np.ndarray, record: bool) -> Result:
         if record:
-            self.stats.rejected_requests += 1
-        nan = np.full((b.n_points, self.cfg.node_out), np.nan, np.float32)
+            with self.stats.lock:
+                self.stats.rejected_requests += 1
+        nan = np.full((n_points, self.cfg.node_out), np.nan, np.float32)
         t = time.perf_counter()
         return Result(request_id=req.request_id, points=pts, fields=nan,
-                      latency_s=t - (req.t_submit or t), bucket=b.n_points,
+                      latency_s=t - (req.t_submit or t), bucket=n_points,
                       batch_size=0, error=reason)
 
     # ------------------------------------------- prepare / dispatch / harvest
@@ -379,13 +629,25 @@ class GNNServer:
         results: List[Result] = []
         ok_reqs, samples = [], []
         for req in reqs:
+            if (self.reject_overflow and req.n_points is not None
+                    and req.n_points > b.n_points):
+                # static-ladder oversize: reject instead of downsampling
+                # (under auto routing the bucket always fits the request)
+                results.append(self._reject(
+                    req, b.n_points,
+                    f"request for {req.n_points} points exceeds the "
+                    f"largest bucket ({b.n_points}) and reject_overflow "
+                    "is set; use bucket_sizes='auto' to grow the ladder",
+                    np.zeros((0, 3), np.float32), record))
+                continue
             pts, nrm = self._sample(req, b.n_points)
             dropped = 0
             if record and self.check_requests:
                 dropped = self._check_cloud(b, pts, req.request_id)
             if dropped and self.reject_overflow:
                 results.append(self._reject(
-                    req, b, f"grid overflow: {dropped} candidate slots "
+                    req, b.n_points,
+                    f"grid overflow: {dropped} candidate slots "
                     "dropped (geometry denser than calibration reference)",
                     pts, record))
                 continue
@@ -416,11 +678,12 @@ class GNNServer:
                     halo_width=sharded.global_halo_width(pts, b.ms),
                     spec=b.sspec)
             except ValueError as e:
-                pre = pre + [self._reject(req, b, str(e), pts, record)]
+                pre = pre + [self._reject(req, b.n_points, str(e), pts,
+                                          record)]
                 return _InFlight(bucket=b, results=pre, ok_reqs=[], out=None,
                                  pts=pts, record=record)
-            out = b.shard_infer(self.params,
-                                shard_put(plan.batch(), self._mesh))
+            out = self._call_compiled(b, b.shard_infer, self.params,
+                                      shard_put(plan.batch(), self._mesh))
             return _InFlight(bucket=b, results=pre, ok_reqs=[req], out=out,
                              pts=pts, record=record, plan=plan)
         # static batcher: always pad to max_batch rows so each bucket
@@ -437,10 +700,35 @@ class GNNServer:
         # timeline, and donation lets XLA reuse the buffers (off-CPU)
         dev_pts = jax.device_put(pts)
         dev_nrm = jax.device_put(nrm)
-        out = b.infer(self.params, dev_pts, dev_nrm,
-                      jnp.full((rows,), n, jnp.int32))
+        out = self._call_compiled(b, b.infer, self.params, dev_pts, dev_nrm,
+                                  jnp.full((rows,), n, jnp.int32))
         return _InFlight(bucket=b, results=pre, ok_reqs=ok_reqs, out=out,
                          pts=pts, record=record)
+
+    def _call_compiled(self, b: Bucket, fn, *args):
+        """Invoke a bucket's jitted program, counting ACTUAL compiles.
+
+        jit tracing/compilation happens synchronously inside the call (the
+        device execution stays async), so jit-cache growth across the call
+        is exactly the number of fresh compiles — a warm call counts zero,
+        which is what makes the cache hit/eviction stats trustworthy.
+        """
+        cache_size = getattr(fn, "_cache_size", None)
+        before = cache_size() if cache_size is not None else None
+        out = fn(*args)
+        if before is not None:
+            grew = cache_size() - before
+            if grew > 0:
+                b.compiles += grew
+                with self.stats.lock:
+                    self.stats.bucket_compiles += grew
+        return out
+
+    def _padding_of(self, b: Bucket, req: Request) -> Tuple[int, int]:
+        """(requested, padded-waste) point counts for one served request."""
+        asked = b.n_points if req.n_points is None else \
+            min(int(req.n_points), b.n_points)
+        return asked, b.n_points - asked
 
     def _harvest(self, fl: _InFlight) -> List[Result]:
         """Sync stage: block on the device output, build Results, record."""
@@ -460,21 +748,35 @@ class GNNServer:
                                   fields=fields, latency_s=lat,
                                   bucket=b.n_points, batch_size=1))
             if record:
-                self.stats.latencies_s.append(lat)
-                self.stats.batch_sizes.append(1)
+                asked, waste = self._padding_of(b, req)
+                with self.stats.lock:
+                    self.stats.latencies_s.append(lat)
+                    self.stats.batch_sizes.append(1)
+                    self.stats.requested_points += asked
+                    self.stats.padding_points += waste
                 b.served += 1
             return results
         t_done = time.perf_counter()
+        lats = []
         for i, req in enumerate(fl.ok_reqs):
             lat = t_done - (req.t_submit or t_done)
+            lats.append(lat)
             results.append(Result(request_id=req.request_id, points=fl.pts[i],
                                   fields=out[i], latency_s=lat,
                                   bucket=b.n_points,
                                   batch_size=len(fl.ok_reqs)))
-            if record:
-                self.stats.latencies_s.append(lat)
-        if record:
-            self.stats.batch_sizes.append(len(fl.ok_reqs))
+        if record and fl.ok_reqs:
+            padding = [self._padding_of(b, req) for req in fl.ok_reqs]
+            # partial microbatches replay the last request to fill max_batch
+            # rows (_dispatch): that compute is discarded, so it is waste too
+            replay_rows = max(self.max_batch, len(fl.ok_reqs)) - \
+                len(fl.ok_reqs)
+            with self.stats.lock:
+                self.stats.latencies_s.extend(lats)
+                self.stats.batch_sizes.append(len(fl.ok_reqs))
+                self.stats.requested_points += sum(a for a, _ in padding)
+                self.stats.padding_points += sum(w for _, w in padding) + \
+                    replay_rows * b.n_points
             b.served += len(fl.ok_reqs)
         return results
 
@@ -487,35 +789,37 @@ class GNNServer:
     # ------------------------------------------------------------- flushing
 
     def _drain_plan(self, ready_only: bool = False
-                    ) -> List[Tuple[Bucket, List[Request]]]:
-        """Pop queued requests into (bucket, batch) work items.
+                    ) -> List[Tuple[int, List[Request]]]:
+        """Pop queued requests into (bucket size, batch) work items.
 
         Deterministic order: ascending bucket size, FIFO within a bucket.
         ``ready_only`` keeps batches that are full (``max_batch``) or whose
         oldest request has exceeded the background deadline; the final
         partial batch of a bucket stays queued until its deadline expires.
+        Work items carry the SIZE, not the bucket: under the autoscaler a
+        bucket may not be built yet — ``_run_plan`` resolves it through the
+        compiled-program cache outside this lock.
         """
         now = time.perf_counter()
-        plan: List[Tuple[Bucket, List[Request]]] = []
+        width = 1 if self.shard_devices > 1 else self.max_batch
+        plan: List[Tuple[int, List[Request]]] = []
         for n in sorted(self._queues):
             q = self._queues[n]
-            b = self._buckets[n]
-            width = 1 if b.sspec is not None else self.max_batch
             while q:
                 expired = now - q[0].t_submit >= self._deadline_s
                 if ready_only and len(q) < width and not expired:
                     break
-                plan.append((b, [q.popleft()
+                plan.append((n, [q.popleft()
                                  for _ in range(min(len(q), width))]))
         return plan
 
-    def _item_error(self, b: Bucket, batch: List[Request],
+    def _item_error(self, n_points: int, batch: List[Request],
                     e: Exception) -> _InFlight:
         """Turn one failed work item into error Results (background mode)."""
-        res = [self._reject(req, b, f"serving error: {e!r}",
+        res = [self._reject(req, n_points, f"serving error: {e!r}",
                             np.zeros((0, 3), np.float32), True)
                for req in batch]
-        return _InFlight(bucket=b, results=res, ok_reqs=[], out=None,
+        return _InFlight(bucket=None, results=res, ok_reqs=[], out=None,
                          pts=np.zeros((0,)), record=True)
 
     def _run_plan(self, plan, async_mode: bool,
@@ -533,34 +837,48 @@ class GNNServer:
         Results, every other batch completes normally. Foreground flushes
         keep raising so callers see the exception.
         """
-        results: List[Result] = []
         with self._serve_lock:
-            t0 = time.perf_counter()
-            if not async_mode:
-                for b, batch in plan:
-                    try:
-                        results.extend(self._run_batch(b, batch))
-                    except Exception as e:
-                        if not errors_as_results:
-                            raise
-                        results.extend(self._item_error(b, batch, e).results)
-            else:
-                inflight: Optional[_InFlight] = None
-                for b, batch in plan:
-                    try:
-                        pre, ok, samples = self._prepare(b, batch, True)
-                        nxt = self._dispatch(b, pre, ok, samples, True)
-                    except Exception as e:
-                        if not errors_as_results:
-                            raise
-                        nxt = self._item_error(b, batch, e)
-                    if inflight is not None:
-                        results.extend(self._harvest_guarded(
-                            inflight, errors_as_results))
-                    inflight = nxt
+            with self._cond:                  # shield plan buckets from LRU
+                self._plan_sizes = {n for n, _ in plan}
+            try:
+                return self._run_plan_inner(plan, async_mode,
+                                            errors_as_results)
+            finally:
+                with self._cond:
+                    self._plan_sizes = set()
+
+    def _run_plan_inner(self, plan, async_mode: bool,
+                        errors_as_results: bool) -> List[Result]:
+        results: List[Result] = []
+        t0 = time.perf_counter()
+        if not async_mode:
+            for n, batch in plan:
+                try:
+                    b = self._ensure_bucket(n)
+                    results.extend(self._run_batch(b, batch))
+                except Exception as e:
+                    if not errors_as_results:
+                        raise
+                    results.extend(self._item_error(n, batch, e).results)
+        else:
+            inflight: Optional[_InFlight] = None
+            for n, batch in plan:
+                try:
+                    b = self._ensure_bucket(n)
+                    pre, ok, samples = self._prepare(b, batch, True)
+                    nxt = self._dispatch(b, pre, ok, samples, True)
+                except Exception as e:
+                    if not errors_as_results:
+                        raise
+                    nxt = self._item_error(n, batch, e)
                 if inflight is not None:
                     results.extend(self._harvest_guarded(
                         inflight, errors_as_results))
+                inflight = nxt
+            if inflight is not None:
+                results.extend(self._harvest_guarded(
+                    inflight, errors_as_results))
+        with self.stats.lock:
             self.stats.t_serving += time.perf_counter() - t0
         return results
 
@@ -571,8 +889,9 @@ class GNNServer:
         except Exception as e:
             if not errors_as_results:
                 raise
+            n = fl.bucket.n_points if fl.bucket is not None else 0
             return list(fl.results) + \
-                self._item_error(fl.bucket, fl.ok_reqs, e).results
+                self._item_error(n, fl.ok_reqs, e).results
 
     def flush(self, *, async_mode: Optional[bool] = None) -> List[Result]:
         """Drain every queue, up to ``max_batch`` requests per XLA call.
@@ -684,9 +1003,9 @@ class GNNServer:
                 results = self._run_plan(plan, self.async_flush,
                                          errors_as_results=True)
             except Exception as e:
-                results = [self._reject(req, b, f"serving error: {e!r}",
+                results = [self._reject(req, n, f"serving error: {e!r}",
                                         np.zeros((0, 3), np.float32), True)
-                           for b, batch in plan for req in batch]
+                           for n, batch in plan for req in batch]
             with self._cond:
                 for r in results:
                     self._done[r.request_id] = r
@@ -703,7 +1022,16 @@ class GNNServer:
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--buckets", default="512,1024")
+    ap.add_argument("--buckets", default="512,1024",
+                    help="comma-separated static ladder, or 'auto' to "
+                    "derive buckets from traffic (autoscaler)")
+    ap.add_argument("--max-live-buckets", type=int, default=None,
+                    help="compiled-program cache bound for --buckets auto "
+                    "(cold buckets are LRU-evicted beyond it)")
+    ap.add_argument("--bucket-granularity", type=int, default=None,
+                    help="auto bucket sizes round up to this multiple")
+    ap.add_argument("--refit-every", type=int, default=None,
+                    help="submits between quantile ladder refits (auto)")
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--knn-impl", default="xla", choices=["xla", "pallas"])
@@ -725,7 +1053,15 @@ def main():
     cfg = GNNConfig()
     if args.reduced:
         cfg = cfg.reduced()
-    buckets = tuple(int(b) for b in args.buckets.split(","))
+    if args.max_live_buckets is not None:
+        cfg = cfg.replace(max_live_buckets=args.max_live_buckets)
+    if args.bucket_granularity is not None:
+        cfg = cfg.replace(bucket_granularity=args.bucket_granularity)
+    if args.refit_every is not None:
+        cfg = cfg.replace(bucket_refit_every=args.refit_every)
+    auto = args.buckets.strip().lower() == "auto"
+    buckets = "auto" if auto else \
+        tuple(int(b) for b in args.buckets.split(","))
     kw = dict(max_batch=args.max_batch, knn_impl=args.knn_impl,
               agg_impl=args.agg_impl, shard_devices=args.shard_devices,
               async_flush=not args.sync)
@@ -736,19 +1072,31 @@ def main():
         server = GNNServer(cfg, buckets, **kw)
     t0 = time.perf_counter()
     server.warmup()
-    print(f"warmup (compile {len(buckets)} buckets): "
-          f"{time.perf_counter() - t0:.1f}s")
+    if auto:
+        print("autoscaling buckets: ladder derived from traffic "
+              "(no warmup compiles)")
+    else:
+        print(f"warmup (compile {len(buckets)} buckets): "
+              f"{time.perf_counter() - t0:.1f}s")
 
     rng = np.random.default_rng(1)
+    req_sizes = (128, 192, 256) if auto else buckets
     reqs = []
     for i in range(args.requests):
         verts, faces = geo.car_surface(geo.sample_params(i))
-        reqs.append((verts, faces, int(rng.choice(buckets))))
+        reqs.append((verts, faces, int(rng.choice(req_sizes))))
     results = server.serve(reqs)
     rep = server.stats.report()
     print(f"served {rep['requests']} requests | p50 {rep['p50_ms']:.1f} ms | "
           f"p95 {rep['p95_ms']:.1f} ms | mean batch {rep['mean_batch']:.1f} | "
           f"{rep['throughput_rps']:.1f} req/s")
+    if auto:
+        print(f"auto ladder {list(server.ladder())} | "
+              f"hits {rep['bucket_hits']} misses {rep['bucket_misses']} "
+              f"evictions {rep['bucket_evictions']} "
+              f"compiles {rep['bucket_compiles']} "
+              f"grown {rep['grown_buckets']} | "
+              f"padding waste {rep['padding_waste_frac']:.1%}")
     for r in results[:3]:
         cp = r.fields[:, 0]
         print(f"  req {r.request_id}: bucket {r.bucket}, "

@@ -1,0 +1,341 @@
+"""Autoscaling padding buckets: traffic-derived ladder, compiled-program
+cache (LRU eviction + rebuild), oversize-request semantics, compile/stat
+accounting, and thread-safe introspection.
+
+Covers the serving-roadmap autoscaler plus three regression fixes:
+  - oversize requests are never silently truncated (warn+count / reject /
+    grow, depending on policy),
+  - ``warmup()`` counts ACTUAL compiles (calling it twice compiles once),
+  - ``pending()`` / ``ServerStats.report()`` snapshot under locks while the
+    background worker mutates.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.configs.base import GNNConfig
+from repro.data import geometry as geo
+from repro.launch.serve_gnn import GNNServer
+
+
+def _cfg(**kw):
+    return GNNConfig().reduced().replace(levels=(64, 128, 256), **kw)
+
+
+def _geom(i=0):
+    return geo.car_surface(geo.sample_params(i))
+
+
+# ---------------------------------------------------------------- routing
+
+def test_auto_ladder_matches_static_ladder_exactly():
+    """An auto ladder that contains size n serves a size-n request with the
+    SAME compiled program as a static ladder pinned at n: identical points
+    and fields (well under the 1e-5 acceptance bar)."""
+    verts, faces = _geom(0)
+    static = GNNServer(_cfg(), (128,), max_batch=1, seed=5)
+    [want] = static.serve([(verts, faces, 128)])
+
+    auto = GNNServer(_cfg(bucket_granularity=64), "auto", max_batch=1,
+                     seed=5)
+    [got] = auto.serve([(verts, faces, 128)])
+    assert got.bucket == 128 and auto.ladder() == (128,)
+    np.testing.assert_array_equal(want.points, got.points)
+    np.testing.assert_allclose(want.fields, got.fields, atol=1e-6)
+
+
+def test_auto_oversize_grows_bucket_never_truncates():
+    """A request larger than every known size grows the ladder (rounded up
+    to the granularity) instead of being downsampled."""
+    verts, faces = _geom(0)
+    server = GNNServer(_cfg(bucket_granularity=64), "auto", max_batch=1,
+                       seed=0)
+    [small] = server.serve([(verts, faces, 64)])
+    assert small.bucket == 64
+    # 200 > 64: static would have clamped; auto grows a 256-point bucket
+    [big] = server.serve([(verts, faces, 200)])
+    assert big.bucket == 256                   # round_up(200, 64)
+    assert big.fields.shape == (256, 4)
+    assert np.isfinite(big.fields).all()
+    rep = server.stats.report()
+    assert rep["grown_buckets"] == 2           # first request also grew 64
+    assert rep["oversize_requests"] == 0       # never truncated under auto
+    assert server.ladder() == (64, 256)
+
+
+def test_static_oversize_warns_and_counts():
+    """Static ladder + oversize ask: served at the largest bucket, but with
+    a warning and an ``oversize_requests`` stat — no more silent clamp."""
+    import warnings as w
+    verts, faces = _geom(0)
+    server = GNNServer(_cfg(), (128,), max_batch=1, seed=0)
+    with w.catch_warnings(record=True) as caught:
+        w.simplefilter("always")
+        [res] = server.serve([(verts, faces, 10_000)])
+    assert res.bucket == 128 and res.error is None
+    assert any("DOWNSAMPLED" in str(c.message) for c in caught)
+    assert server.stats.report()["oversize_requests"] == 1
+
+
+def test_static_oversize_rejected_under_reject_overflow():
+    """reject_overflow=True turns the oversize downsample into a rejection:
+    Result.error set, NaN fields, counted — and in-range traffic in the
+    same flush is unaffected."""
+    import warnings as w
+    verts, faces = _geom(0)
+    server = GNNServer(_cfg(), (128,), max_batch=2, seed=0,
+                       reject_overflow=True)
+    with w.catch_warnings():
+        w.simplefilter("ignore")
+        results = server.serve([(verts, faces, 500),
+                                (verts, faces, 100)])
+    by_id = {r.request_id: r for r in results}
+    assert by_id[0].error is not None and "exceeds" in by_id[0].error
+    assert np.isnan(by_id[0].fields).all()
+    assert by_id[1].error is None and np.isfinite(by_id[1].fields).all()
+    rep = server.stats.report()
+    assert rep["oversize_requests"] == 1
+    assert rep["rejected_requests"] == 1
+
+
+def test_auto_bootstrap_default_resolution():
+    """n_points=None on an empty auto ladder routes to the 1024-point
+    bootstrap size; bucket_for is a PURE query — no ladder growth, no
+    stats, no warnings."""
+    server = GNNServer(_cfg(bucket_granularity=64), "auto")
+    assert server.bucket_for(None) == 1024
+    assert server.bucket_for(5000) == 5056     # would-grow answer, no grow
+    assert server.ladder() == ()               # nothing built yet
+    assert server.target_ladder() == ()        # ...and nothing grown
+    assert server.stats.report()["grown_buckets"] == 0
+
+
+def test_bucket_for_pure_on_static_ladder():
+    """Oversize probes through the public query don't warn or skew the
+    served-traffic stats; only the submit path counts."""
+    import warnings as w
+    server = GNNServer(_cfg(), (128,), max_batch=1)
+    with w.catch_warnings():
+        w.simplefilter("error")                # any warning would fail
+        for _ in range(3):
+            assert server.bucket_for(10_000) == 128
+    assert server.stats.report()["oversize_requests"] == 0
+
+
+def test_bucket_policy_validated():
+    with pytest.raises(ValueError, match="bucket_policy"):
+        GNNServer(_cfg(bucket_policy="bogus"), (64,))
+    with pytest.raises(ValueError, match="at least one bucket"):
+        GNNServer(_cfg(), ())
+
+
+def test_auto_gated_off_sharded():
+    """The sharded path freezes per-shard shapes at init, so the autoscaler
+    is explicitly unsharded-only (documented gating)."""
+    with pytest.raises(ValueError, match="unsharded"):
+        GNNServer(_cfg(), "auto", shard_devices=2)
+
+
+def test_seeded_auto_ladder_via_config_policy():
+    """cfg.bucket_policy='auto' + a static list seeds the autoscaler: the
+    seed buckets are live at init and the ladder still grows."""
+    verts, faces = _geom(0)
+    cfg = _cfg(bucket_policy="auto", bucket_granularity=64)
+    server = GNNServer(cfg, (64,), max_batch=1, seed=0)
+    assert server.auto and server.ladder() == (64,)
+    [res] = server.serve([(verts, faces, 128)])
+    assert res.bucket == 128
+    assert server.ladder() == (64, 128)
+
+
+# --------------------------------------------- cache: evict + recompile
+
+def test_evict_then_recompile_roundtrip_exact():
+    """With the compiled-program cache capped at 2, a third bucket evicts
+    the coldest one; traffic returning to the evicted size transparently
+    rebuilds (recompiles) it and reproduces the static-ladder answer
+    exactly. Hit/miss/eviction/compile counters stay truthful throughout."""
+    verts, faces = _geom(0)
+    sizes = [64, 128, 192, 64]                 # last 64 lands post-eviction
+
+    static = GNNServer(_cfg(), (64, 128, 192), max_batch=1, seed=9)
+    want = [static.serve([(verts, faces, n)])[0] for n in sizes]
+
+    cfg = _cfg(bucket_granularity=64, max_live_buckets=2)
+    auto = GNNServer(cfg, "auto", max_batch=1, seed=9)
+    got = [auto.serve([(verts, faces, n)])[0] for n in sizes]
+
+    for a, b in zip(want, got):
+        assert a.request_id == b.request_id and a.bucket == b.bucket
+        np.testing.assert_array_equal(a.points, b.points)
+        np.testing.assert_allclose(a.fields, b.fields, atol=1e-6)
+
+    rep = auto.stats.report()
+    assert rep["bucket_evictions"] == 2        # 64 evicted, then 128
+    assert rep["bucket_misses"] == 4           # 3 builds + the 64 rebuild
+    assert rep["bucket_compiles"] == 4         # every build compiled once
+    assert rep["bucket_hits"] == 0
+    assert len(auto.ladder()) <= 2             # cache bound held
+    assert 64 in auto.ladder()                 # the rebuilt bucket is live
+
+
+def test_eviction_spares_buckets_in_the_active_plan():
+    """A bucket whose batch was already drained into the running plan has
+    an empty queue but is NOT idle: evicting it would force a rebuild +
+    recompile one work item later in the same flush. The cache cap is soft
+    within a plan instead."""
+    verts, faces = _geom(0)
+    cfg = _cfg(bucket_granularity=64, max_live_buckets=1)
+    server = GNNServer(cfg, "auto", max_batch=1, seed=0)
+    server.serve([(verts, faces, 128)])        # 128 live (at the cap)
+    # simulate what _run_plan does while a drained plan containing 128 is
+    # executing: its queue is empty but its batch is about to dispatch
+    server._plan_sizes = {128}
+    server._ensure_bucket(64)                  # over cap, but 128 shielded
+    assert server.ladder() == (64, 128)        # soft cap: no eviction
+    assert server.stats.report()["bucket_evictions"] == 0
+    # once the plan finishes, LRU eviction resumes enforcing the cap
+    server._plan_sizes = set()
+    server._ensure_bucket(192)
+    assert server.stats.report()["bucket_evictions"] == 2
+    assert server.ladder() == (192,)
+
+
+def test_undersize_traffic_reuses_live_bucket():
+    """Requests smaller than a live bucket ride in it (cache hit): no new
+    build, padding waste recorded."""
+    verts, faces = _geom(0)
+    server = GNNServer(_cfg(bucket_granularity=64), "auto", max_batch=1,
+                       seed=0)
+    server.serve([(verts, faces, 128)])
+    [res] = server.serve([(verts, faces, 50)])
+    assert res.bucket == 128                   # rode the existing bucket
+    rep = server.stats.report()
+    assert rep["bucket_misses"] == 1 and rep["bucket_hits"] == 1
+    assert rep["padding_waste_frac"] > 0.0     # 78 padded points recorded
+
+
+def test_quantile_refit_adds_tighter_bucket():
+    """Sustained undersize traffic triggers a quantile refit that adds a
+    tight bucket, cutting padding waste for subsequent requests."""
+    verts, faces = _geom(0)
+    cfg = _cfg(bucket_granularity=8, bucket_refit_every=4,
+               bucket_quantiles=(0.5,))
+    server = GNNServer(cfg, "auto", max_batch=2, seed=0)
+    server.serve([(verts, faces, 256)])        # ladder: (256,)
+    for _ in range(8):                         # refit fires at submit #4
+        server.submit(verts, faces, 40)
+    results = server.flush()
+    buckets = {r.bucket for r in results}
+    assert buckets == {40, 256}                # tight bucket took over
+    assert 40 in server.target_ladder()
+    late = [r for r in results if r.bucket == 40]
+    assert len(late) == 5                      # submits after the refit
+    for r in late:
+        assert np.isfinite(r.fields).all()
+
+
+# ----------------------------------------------------- compile accounting
+
+def test_warmup_counts_actual_compiles_once():
+    """Regression: warmup() used to bump ``Bucket.compiles`` per call even
+    with a warm jit cache. It now reflects real XLA compiles."""
+    server = GNNServer(_cfg(), (64, 128), max_batch=1, seed=0)
+    server.warmup()
+    server.warmup()                            # warm cache: no new compile
+    for b in server._buckets.values():
+        assert b.compiles == 1
+    assert server.stats.report()["bucket_compiles"] == 2
+    # serving traffic of the warmed shape compiles nothing further
+    verts, faces = _geom(0)
+    server.serve([(verts, faces, 64)])
+    assert server._buckets[64].compiles == 1
+
+
+def test_served_counter_and_compiles_via_traffic():
+    """Without warmup the first request compiles (counted once); repeats of
+    the same bucket shape do not."""
+    verts, faces = _geom(0)
+    server = GNNServer(_cfg(), (64,), max_batch=1, seed=0)
+    server.serve([(verts, faces, 64)])
+    server.serve([(verts, faces, 64)])
+    b = server._buckets[64]
+    assert b.compiles == 1 and b.served == 2
+
+
+# -------------------------------------------------- stats thread-safety
+
+def test_stats_and_pending_safe_under_background_worker():
+    """Regression: ``pending()`` iterated ``_queues`` and ``report()``
+    iterated live latency lists while the worker appended — both now
+    snapshot under locks. Hammer them concurrently and check the final
+    report is complete and consistent."""
+    verts, faces = _geom(0)
+    server = GNNServer(_cfg(), (64,), max_batch=2, seed=0)
+    server.warmup()
+    server.start(deadline_s=0.005)
+    n_req = 10
+    stop = threading.Event()
+    failures = []
+
+    def hammer():
+        while not stop.is_set():
+            try:
+                rep = server.stats.report()
+                assert rep["requests"] >= 0 and server.pending() >= 0
+            except Exception as e:          # pragma: no cover - regression
+                failures.append(e)
+                return
+
+    t = threading.Thread(target=hammer, daemon=True)
+    t.start()
+    try:
+        rids = [server.submit(verts, faces, 64) for _ in range(n_req)]
+        results = [server.result(r, timeout=60.0) for r in rids]
+    finally:
+        stop.set()
+        t.join(timeout=10.0)
+        server.stop()
+    assert not failures
+    assert all(r.error is None for r in results)
+    rep = server.stats.report()
+    assert rep["requests"] == n_req
+    assert server.pending() == 0
+
+
+def test_auto_with_background_worker():
+    """The autoscaler composes with the deadline worker: submits grow the
+    ladder, the worker builds/compiles buckets on demand."""
+    verts, faces = _geom(0)
+    server = GNNServer(_cfg(bucket_granularity=64), "auto", max_batch=2,
+                       seed=0)
+    server.start(deadline_s=0.005)
+    try:
+        small = server.submit(verts, faces, 64)
+        big = server.submit(verts, faces, 180)     # grows a 192 bucket
+        r_small = server.result(small, timeout=120.0)
+        r_big = server.result(big, timeout=120.0)
+    finally:
+        server.stop()
+    assert r_small.bucket == 64 and r_big.bucket == 192
+    assert np.isfinite(r_small.fields).all()
+    assert np.isfinite(r_big.fields).all()
+    assert server.ladder() == (64, 192)
+
+
+def test_from_checkpoint_accepts_auto(tmp_path):
+    """The bucket_sizes='auto' knob threads through from_checkpoint."""
+    import jax
+    from repro.ckpt import checkpoint as ckpt
+    from repro.models import meshgraphnet
+
+    cfg = _cfg()
+    params = meshgraphnet.init(jax.random.PRNGKey(1), cfg)
+    path = str(tmp_path / "ckpt.msgpack")
+    ckpt.save(path, {"params": params})
+    server = GNNServer.from_checkpoint(path, cfg, "auto", max_batch=1,
+                                       seed=3)
+    verts, faces = _geom(0)
+    [res] = server.serve([(verts, faces, 64)])
+    assert res.bucket == 64 and np.isfinite(res.fields).all()
