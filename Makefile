@@ -1,7 +1,7 @@
 PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: verify test bench-graph bench-serve smoke
+.PHONY: verify test bench-graph bench-serve bench-train smoke
 
 # tier-1 gate: full test suite + graph-build perf smoke
 verify: test bench-graph
@@ -15,6 +15,10 @@ bench-graph:
 # serving hot path: async-vs-sync flush + aggregation impl comparison
 bench-serve:
 	cd benchmarks && PYTHONPATH=../src $(PY) bench_serve.py --smoke
+
+# training step: single-device scan vs shard_map partition-parallel
+bench-train:
+	cd benchmarks && PYTHONPATH=../src $(PY) bench_train.py --smoke
 
 # quickest end-to-end signal: serving example on a reduced model
 smoke:

@@ -149,6 +149,12 @@ class GNNConfig:
     n_partitions: int = 21
     halo: int = 15                     # == n_mp_layers
     fourier_freqs: Tuple[float, ...] = (2.0, 4.0, 8.0)  # x pi
+    graph_source: str = "host"     # training-graph construction: "host"
+                                   # (cKDTree multi-scale build in
+                                   # data/pipeline.py) or "graphx" (the
+                                   # device-resident hash-grid pipeline
+                                   # serving uses — mesh-free, same edge
+                                   # union, no cKDTree in the build)
     agg_impl: str = "xla"          # processor scatter-add: "xla" (plain
                                    # segment_sum), "sorted" (device argsort
                                    # once per graph + segment_sum with

@@ -19,7 +19,7 @@ from the compiled HLO.
 from __future__ import annotations
 
 from functools import partial
-from typing import Sequence
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -33,7 +33,8 @@ except ImportError:  # jax < 0.5
 from repro.configs.base import GNNConfig
 from repro.core import halo as halo_lib
 from repro.core.gradient_aggregation import (
-    padded_partition_batches, scan_aggregate_gradients, tree_pvary)
+    padded_partition_batches, scan_aggregate_gradients,
+    shard_map_aggregate_gradients, tree_pvary)
 from repro.models import meshgraphnet as mgn
 from repro.models import nn
 
@@ -42,37 +43,33 @@ from repro.models import nn
 # Scheme 1: X-MGN — partitions as DDP batches, one grad psum per step.
 # --------------------------------------------------------------------------
 
-def make_xmgn_ddp_grad_fn(mesh, cfg: GNNConfig, denom: float,
-                          data_axes: Sequence[str] = ("data",)):
-    """Returns jitted ``f(params, stacked_batches) -> (loss, grads)``.
+def make_xmgn_ddp_grad_fn(mesh, cfg: GNNConfig, denom: Optional[float] = None,
+                          data_axes: Sequence[str] = ("data",),
+                          jit: bool = True):
+    """Returns ``f(params, stacked_batches) -> (loss, grads)`` (jitted by
+    default; pass ``jit=False`` to compose it into a larger jitted step, as
+    ``launch.train`` does).
 
     ``stacked_batches`` is the (P, ...) pytree from
     ``gradient_aggregation.padded_partition_batches``; P must be divisible by
     the product of ``data_axes`` sizes. Each device group scans its local
     partitions and the gradients are summed with a single ``psum`` — the
-    paper's gradient-aggregation scheme expressed as a JAX collective.
+    paper's gradient-aggregation scheme expressed as a JAX collective (the
+    shard_map wiring lives in
+    ``gradient_aggregation.shard_map_aggregate_gradients``).
+
+    ``denom`` may be baked in as a float, or left ``None``: the loss
+    normalizer is then read from the batch's ``"denom"`` leaf — a (P,)
+    array repeating the per-sample global denominator — so one compiled
+    step serves samples of different sizes (the trainer's case).
     """
-    axes = tuple(data_axes)
+    def grad_fn(p, b):
+        d = b["denom"] if denom is None else denom
+        return jax.value_and_grad(
+            lambda q: mgn.loss_fn(q, cfg, b, denom=d))(p)
 
-    def local_grads(params, batches):
-        # Mark params varying so grads stay LOCAL through the scan; aggregate
-        # with exactly ONE psum per step — the paper's gradient aggregation.
-        params_v = tree_pvary(params, axes)
-
-        def grad_fn(p, b):
-            return jax.value_and_grad(
-                lambda q: mgn.loss_fn(q, cfg, b, denom=denom))(p)
-        loss, grads = scan_aggregate_gradients(grad_fn, params_v, batches,
-                                               varying_axes=axes)
-        loss = jax.lax.psum(loss, axes)
-        grads = jax.lax.psum(grads, axes)
-        return loss, grads
-
-    batch_spec = P(axes)
-    fn = shard_map(local_grads, mesh=mesh,
-                   in_specs=(P(), batch_spec),
-                   out_specs=(P(), P()))
-    return jax.jit(fn)
+    return shard_map_aggregate_gradients(mesh, grad_fn,
+                                         axes=tuple(data_axes), jit=jit)
 
 
 # --------------------------------------------------------------------------

@@ -110,3 +110,37 @@ def scan_aggregate_gradients(grad_fn: Callable, params, stacked_batches: dict,
         init = tree_pvary(init, tuple(varying_axes))
     (loss, grads), _ = jax.lax.scan(body, init, stacked_batches)
     return loss, grads
+
+
+def shard_map_aggregate_gradients(mesh, grad_fn: Callable,
+                                  axes: Sequence[str] = ("data",),
+                                  jit: bool = False):
+    """Partition-parallel twin of :func:`scan_aggregate_gradients`.
+
+    Returns ``f(params, stacked_batches) -> (loss, grads)``: ``params`` are
+    replicated, the stacked (P, ...) batch is sharded over the mesh ``axes``
+    on its leading dim, each device runs the sequential scan over ITS local
+    partitions, and the per-device sums are combined with exactly ONE
+    ``psum`` per quantity per step — the paper's gradient-aggregation scheme
+    (SIII-A) expressed as a collective. P must be divisible by the product
+    of the ``axes`` sizes. Equivalence to the single-device scan (and to
+    full-graph gradients) is pinned by ``tests/test_train_equivalence.py``.
+    """
+    try:
+        from jax import shard_map
+    except ImportError:  # jax < 0.5
+        from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    axes = tuple(axes)
+
+    def local(params, stacked):
+        # Mark params varying so grads stay LOCAL through the scan; the one
+        # psum below is the only cross-device communication of the step.
+        params_v = tree_pvary(params, axes)
+        loss, grads = scan_aggregate_gradients(grad_fn, params_v, stacked,
+                                               varying_axes=axes)
+        return jax.lax.psum(loss, axes), jax.lax.psum(grads, axes)
+
+    fn = shard_map(local, mesh=mesh, in_specs=(P(), P(axes)),
+                   out_specs=(P(), P()))
+    return jax.jit(fn) if jit else fn

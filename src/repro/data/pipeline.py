@@ -60,15 +60,38 @@ class GraphSample:
 
 
 def build_sample(cfg: GNNConfig, sample_id: int,
-                 use_idw: bool = False) -> GraphSample:
-    """One geometry -> multi-scale graph + features + analytic targets."""
+                 use_idw: bool = False,
+                 source: Optional[str] = None) -> GraphSample:
+    """One geometry -> multi-scale graph + features + analytic targets.
+
+    ``source`` (default ``cfg.graph_source``) selects the graph construction:
+    ``"host"`` is the cKDTree multi-scale build; ``"graphx"`` runs the
+    device-resident hash-grid union — the same construction serving uses
+    (mesh-free, no cKDTree in the edge build) — and partitions its edge list
+    on host. Both produce the same edge set (pinned by
+    ``tests/test_train_equivalence.py``), so training is source-agnostic.
+    """
     params = geo.sample_params(sample_id)
     verts, faces = geo.car_surface(params)
     rng = np.random.default_rng(sample_id)
     n_fine = max(cfg.levels)
     points, normals = sample_surface(verts, faces, n_fine, rng)
-    g = build_multiscale_from_points(points, cfg.levels, cfg.k_neighbors,
-                                     normals=normals)
+    source = source or cfg.graph_source
+    if source == "graphx":
+        from repro.core.graph import Graph, relative_edge_features
+        from repro.graphx.pipeline import device_multiscale_edges
+        s, r, lvl = device_multiscale_edges(points, cfg.levels,
+                                            cfg.k_neighbors)
+        g = Graph(positions=points, senders=s, receivers=r, normals=normals,
+                  level_of_edge=lvl)
+        g.edge_feats = relative_edge_features(points, s, r)
+        g.validate()
+    elif source == "host":
+        g = build_multiscale_from_points(points, cfg.levels, cfg.k_neighbors,
+                                         normals=normals)
+    else:
+        raise ValueError(f"unknown graph_source {source!r} "
+                         "(expected 'host' | 'graphx')")
     feats = node_input_features(points, normals, cfg.fourier_freqs)
     if use_idw:
         # pipeline-faithful path: evaluate the field on the raw mesh
@@ -94,26 +117,67 @@ class PartitionedSample:
     denom: float
 
 
+def build_sample_partitions(cfg: GNNConfig, s: GraphSample,
+                            n_partitions: Optional[int] = None):
+    """Partition + halo construction for one sample — the expensive host
+    stage of :func:`partition_sample`, separated so callers can build once
+    and pad several ways (common padding across samples, say) without
+    re-partitioning."""
+    g = s.graph
+    nparts = n_partitions or cfg.n_partitions
+    labels = partitioning.partition(g.senders, g.receivers, g.n_nodes,
+                                    nparts, positions=g.positions)
+    return halo_lib.build_partitions(g.senders, g.receivers, labels,
+                                     nparts, halo_hops=cfg.halo)
+
+
 def partition_sample(cfg: GNNConfig, s: GraphSample,
                      norm_in: Optional[Normalizer] = None,
                      norm_out: Optional[Normalizer] = None,
                      n_partitions: Optional[int] = None,
                      pad_nodes: Optional[int] = None,
-                     pad_edges: Optional[int] = None) -> PartitionedSample:
+                     pad_edges: Optional[int] = None,
+                     parts=None) -> PartitionedSample:
+    """Normalize + partition + pad one sample.
+
+    ``parts`` accepts partitions prebuilt by :func:`build_sample_partitions`
+    — padding already-built partitions is cheap, so discovering common pad
+    dims across samples no longer costs a second partitioning pass.
+    """
     g = s.graph
     feats = norm_in.encode(s.node_feats) if norm_in else s.node_feats
     targs = norm_out.encode(s.targets) if norm_out else s.targets
-    nparts = n_partitions or cfg.n_partitions
-    labels = partitioning.partition(g.senders, g.receivers, g.n_nodes,
-                                    nparts, positions=g.positions)
-    parts = halo_lib.build_partitions(g.senders, g.receivers, labels,
-                                      nparts, halo_hops=cfg.halo)
+    if parts is None:
+        parts = build_sample_partitions(cfg, s, n_partitions)
     padded = halo_lib.pad_partitions(parts, pad_nodes, pad_edges)
     stacked = padded_partition_batches(padded, feats.astype(np.float32),
                                        g.edge_feats, targs.astype(np.float32))
     return PartitionedSample(stacked=stacked, padded=padded,
                              n_nodes=g.n_nodes,
                              denom=float(g.n_nodes * cfg.node_out))
+
+
+def partition_samples(cfg: GNNConfig, samples: Sequence[GraphSample],
+                      norm_in: Optional[Normalizer] = None,
+                      norm_out: Optional[Normalizer] = None,
+                      n_partitions: Optional[int] = None
+                      ) -> List[PartitionedSample]:
+    """Partition a batch of samples with COMMON padding, partitioning each
+    sample exactly once.
+
+    One jitted step (or eval forward) then covers every sample: the pad dims
+    are the max node/edge counts over all partitions of all samples —
+    identical values to the old discover-then-rebuild double pass, without
+    running ``partition`` + ``build_partitions`` twice per sample (that
+    double build was the trainer's most expensive host preprocessing).
+    """
+    parts_per = [build_sample_partitions(cfg, s, n_partitions)
+                 for s in samples]
+    nmax = max((p.n_nodes for parts in parts_per for p in parts), default=1)
+    emax = max((p.n_edges for parts in parts_per for p in parts), default=1)
+    return [partition_sample(cfg, s, norm_in, norm_out,
+                             pad_nodes=nmax, pad_edges=emax, parts=parts)
+            for s, parts in zip(samples, parts_per)]
 
 
 def split_test_ids(drags: np.ndarray, test_frac: float = 0.1,

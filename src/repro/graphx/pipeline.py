@@ -9,6 +9,7 @@ the same XLA program as the model.
 """
 from __future__ import annotations
 
+import functools
 from typing import Optional, Tuple
 
 import jax
@@ -62,6 +63,64 @@ def make_graph_forward(cfg: GNNConfig, *,
         return pred
 
     return forward
+
+
+@functools.lru_cache(maxsize=64)
+def _cached_edges_fn(ms: MultiscaleSpec, knn_impl: str, interpret: bool):
+    def edges(points, n_valid):
+        return multiscale_edges(points.astype(jnp.float32), n_valid, ms,
+                                impl=knn_impl, interpret=interpret)
+    return jax.jit(edges)
+
+
+def make_edges_fn(ms: MultiscaleSpec, *, knn_impl: str = "xla",
+                  interpret: bool = True, jit: bool = True):
+    """Graph construction alone: ``edges(points, n_valid) -> (senders,
+    receivers, emask)`` with the fixed-shape layout of ``multiscale_edges``.
+
+    The construction half of :func:`make_infer_fn`, for callers that need
+    the edge list itself rather than a prediction — e.g. the mesh-free
+    training data path, which builds edges on device and partitions them on
+    host. The jitted variant is memoized per (spec, impl, interpret), so
+    repeated calls with the same grids — clouds calibrated to identical
+    resolutions — reuse one compiled program instead of re-tracing.
+    """
+    if jit:
+        return _cached_edges_fn(ms, knn_impl, interpret)
+
+    def edges(points, n_valid):
+        return multiscale_edges(points.astype(jnp.float32), n_valid, ms,
+                                impl=knn_impl, interpret=interpret)
+    return edges
+
+
+def device_multiscale_edges(points: np.ndarray, level_sizes, k: int, *,
+                            knn_impl: str = "xla", interpret: bool = True):
+    """One-shot device edge build for a host-resident nested cloud.
+
+    Calibrates per-level grids on THIS cloud (so the hash-grid kNN matches
+    the exact cKDTree answer — the calibration invariant
+    ``tests/test_graphx.py`` pins), runs the jitted fixed-shape union once,
+    and compacts to numpy ``(senders, receivers, level_of_edge)``. The edge
+    SET equals ``repro.core.multiscale.multiscale_edges`` (slot order
+    differs). This is the training-side twin of the serving pipeline: same
+    construction code, host-friendly output for partitioning.
+    """
+    from repro.graphx import hashgrid
+    pts = np.asarray(points, np.float32)
+    levels = tuple(level_sizes)
+    if pts.shape[0] != levels[-1]:
+        raise ValueError(f"points ({pts.shape[0]}) must match finest level "
+                         f"({levels[-1]})")
+    grids = tuple(hashgrid.calibrate_spec(pts[:n], k, n_points=n)
+                  for n in levels)
+    ms = MultiscaleSpec(level_sizes=levels, k=k, grids=grids)
+    s, r, em = make_edges_fn(ms, knn_impl=knn_impl, interpret=interpret)(
+        jnp.asarray(pts), levels[-1])
+    em = np.asarray(em)
+    return (np.asarray(s)[em].astype(np.int32),
+            np.asarray(r)[em].astype(np.int32),
+            ms.level_of_edge[em])
 
 
 def make_infer_fn(cfg: GNNConfig, ms: MultiscaleSpec, *,

@@ -187,6 +187,25 @@ def mesh_for_shards(n_shards: int, devices=None, axis: str = "data"):
     return jax.sharding.Mesh(np.asarray(devices[:n_shards]), (axis,))
 
 
+def shard_count_for(n_items: int, devices=None, limit: Optional[int] = None
+                    ) -> int:
+    """Largest device count that divides ``n_items`` evenly.
+
+    The partition-parallel trainer shards a (P, ...) stacked partition batch
+    over a 1-axis mesh; ``shard_map`` requires P divisible by the mesh size,
+    so pick the largest usable divisor of P: paper config P=21 on an 8-device
+    host trains 7-way (3 partitions per device). ``limit`` caps the count
+    (``--shard-devices``); ``limit=1`` forces the single-device scan path.
+    """
+    n_dev = len(devices if devices is not None else jax.devices())
+    if limit is not None:
+        n_dev = min(n_dev, max(int(limit), 1))
+    d = max(min(n_dev, n_items), 1)
+    while n_items % d:
+        d -= 1
+    return d
+
+
 def shard_put(batch: dict, mesh, axis: str = "data") -> dict:
     """device_put a (P, ...) batch dict with its leading axis on ``axis``."""
     sh = NamedSharding(mesh, P(axis))

@@ -2,15 +2,22 @@
 
 Two modes:
 * GNN (the paper): partitioned X-MeshGraphNet training with halo regions and
-  gradient aggregation on synthetic DrivAerML-proxy data. Partitions are
-  processed as a scanned stacked batch (single host) or DDP-sharded over the
-  device mesh when >1 device is available.
+  gradient aggregation on synthetic DrivAerML-proxy data. The stacked (P, ...)
+  partition batch is processed by a single-device ``lax.scan`` when one device
+  is visible, and partition-parallel under ``shard_map`` when more are: each
+  device scans its local partitions and gradients are combined with exactly
+  ONE psum per step (paper SIII-A — equivalence to full-graph training is
+  pinned by ``tests/test_train_equivalence.py``). Training graphs come from
+  the host cKDTree build (``--graph-source host``) or the device-resident
+  ``repro.graphx`` pipeline serving uses (``--graph-source graphx``).
 * LLM: any assigned architecture (reduced or full config) on synthetic token
   streams.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.train --arch xmgn-drivaer --reduced \
       --steps 100 --samples 8
+  PYTHONPATH=src python -m repro.launch.train --arch xmgn-drivaer --reduced \
+      --steps 100 --graph-source graphx --shard-devices 4
   PYTHONPATH=src python -m repro.launch.train --arch gemma2-9b --reduced \
       --steps 20
 """
@@ -19,6 +26,7 @@ from __future__ import annotations
 import argparse
 import json
 import time
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -27,58 +35,168 @@ import numpy as np
 from repro.ckpt import checkpoint as ckpt
 from repro.configs import get_config
 from repro.configs.base import GNNConfig
+from repro.core import distributed_mgn as dmgn
 from repro.core.gradient_aggregation import scan_aggregate_gradients
 from repro.data import pipeline as pipe
 from repro.data.tokens import token_batches
+from repro.launch.sharding import mesh_for_shards, shard_count_for, shard_put
 from repro.models import meshgraphnet as mgn
 from repro.models import registry
 from repro.optim.adam import AdamConfig, adam_init, adam_update
 
 
+def make_gnn_step_fn(cfg: GNNConfig, opt_cfg: AdamConfig, mesh=None,
+                     axis: str = "data"):
+    """One jitted optimizer step over a stacked (P, ...) partition batch.
+
+    ``mesh=None`` is the single-device scan path — bit-identical to the
+    pre-sharding trainer (same scan, same adam call, checkpoints compatible).
+    With a mesh, the partition axis is sharded over ``axis``: each device
+    scans its local partitions and the per-device sums meet in exactly one
+    ``psum`` (``distributed_mgn.make_xmgn_ddp_grad_fn``); the optimizer then
+    runs on the replicated summed gradients, so parameters stay identical on
+    every device.
+
+    Returns ``step(params, opt, stacked, denom) -> (params, opt, loss,
+    grad_norm)``. On the sharded path ``stacked`` must carry a ``"denom"``
+    leaf of shape (P,) (see :func:`prepare_gnn_batch`) and the ``denom``
+    argument is ignored — a traced scalar cannot cross into ``shard_map``
+    as a closure without re-tracing per sample.
+    """
+    if mesh is None:
+        @jax.jit
+        def step_fn(params, opt, stacked, denom):
+            def grad_fn(p, b):
+                return jax.value_and_grad(
+                    lambda q: mgn.loss_fn(q, cfg, b, denom=denom))(p)
+            loss, grads = scan_aggregate_gradients(grad_fn, params, stacked)
+            params, opt, metrics = adam_update(opt_cfg, grads, opt, params)
+            return params, opt, loss, metrics["grad_norm"]
+        return step_fn
+
+    grad_call = dmgn.make_xmgn_ddp_grad_fn(mesh, cfg, denom=None,
+                                           data_axes=(axis,), jit=False)
+
+    @jax.jit
+    def step_fn(params, opt, stacked, denom):
+        loss, grads = grad_call(params, stacked)
+        params, opt, metrics = adam_update(opt_cfg, grads, opt, params)
+        return params, opt, loss, metrics["grad_norm"]
+    return step_fn
+
+
+def prepare_gnn_batch(ps: pipe.PartitionedSample, mesh=None,
+                      axis: str = "data"):
+    """Device placement for one partitioned sample: ``(stacked, denom)``.
+
+    Single device: plain host->device transfer (the seed trainer's layout).
+    Sharded: the per-sample loss denominator is repeated into a (P,)
+    ``"denom"`` leaf so it shards alongside the partitions (one compiled
+    step covers samples of different sizes), and the batch is placed with
+    its partition axis sharded over the mesh.
+    """
+    if mesh is None:
+        return (jax.tree_util.tree_map(jnp.asarray, ps.stacked),
+                jnp.asarray(ps.denom))
+    stacked = dict(ps.stacked)
+    n_parts = stacked["senders"].shape[0]
+    stacked["denom"] = np.full((n_parts,), ps.denom, np.float32)
+    return shard_put(stacked, mesh, axis), jnp.asarray(ps.denom)
+
+
 def train_gnn(cfg: GNNConfig, steps: int, n_samples: int,
               ckpt_path: str | None = None, log_every: int = 10,
-              agg_impl: str | None = None):
+              agg_impl: str | None = None,
+              graph_source: str | None = None,
+              shard_devices: Optional[int] = None):
+    """Train X-MeshGraphNet on partitioned synthetic DrivAerML-proxy data.
+
+    ``shard_devices`` caps the partition-parallel width (``None`` = use as
+    many visible devices as divide ``cfg.n_partitions``; ``1`` forces the
+    single-device scan path). ``graph_source`` overrides
+    ``cfg.graph_source`` for the training-graph build.
+    """
     if agg_impl is not None:
         cfg = cfg.replace(agg_impl=agg_impl)
+    if graph_source is not None:
+        cfg = cfg.replace(graph_source=graph_source)
     train, test, norm_in, norm_out = pipe.build_dataset(cfg, n_samples)
-    psamples = [pipe.partition_sample(cfg, s, norm_in, norm_out)
-                for s in train]
-    # common padding across samples so one jit covers all
-    nmax = max(p.stacked["node_feats"].shape[1] for p in psamples)
-    emax = max(p.stacked["edge_feats"].shape[1] for p in psamples)
-    psamples = [pipe.partition_sample(cfg, s, norm_in, norm_out,
-                                      pad_nodes=nmax, pad_edges=emax)
-                for s in train]
+    # one partitioning pass per sample + common padding so one jit covers all
+    psamples = pipe.partition_samples(cfg, train, norm_in, norm_out)
 
     params = mgn.init(jax.random.PRNGKey(0), cfg)
     opt_cfg = AdamConfig(total_steps=steps)
     opt = adam_init(params)
 
-    @jax.jit
-    def step_fn(params, opt, stacked, denom):
-        def grad_fn(p, b):
-            return jax.value_and_grad(
-                lambda q: mgn.loss_fn(q, cfg, b, denom=denom))(p)
-        loss, grads = scan_aggregate_gradients(grad_fn, params, stacked)
-        params, opt, metrics = adam_update(opt_cfg, grads, opt, params)
-        return params, opt, loss, metrics["grad_norm"]
+    n_shards = shard_count_for(cfg.n_partitions, limit=shard_devices)
+    mesh = mesh_for_shards(n_shards) if n_shards > 1 else None
+    if mesh is not None:
+        print(f"partition-parallel: {cfg.n_partitions} partitions over "
+              f"{n_shards} devices ({cfg.n_partitions // n_shards} per "
+              "device, one grad psum per step)", flush=True)
+    step_fn = make_gnn_step_fn(cfg, opt_cfg, mesh=mesh)
 
     losses = []
-    t0 = time.time()
+    t_first = 0.0
+    t_warm = 0.0
     for it in range(steps):
-        ps = psamples[it % len(psamples)]
-        stacked = jax.tree_util.tree_map(jnp.asarray, ps.stacked)
-        params, opt, loss, gnorm = step_fn(params, opt, stacked,
-                                           jnp.asarray(ps.denom))
-        losses.append(float(loss))
+        # stage one sample per step: at paper scale a padded partition batch
+        # is GBs, so keeping every sample device-resident would defeat the
+        # single-accelerator mode
+        t0 = time.time()
+        stacked, denom = prepare_gnn_batch(psamples[it % len(psamples)], mesh)
+        params, opt, loss, gnorm = step_fn(params, opt, stacked, denom)
+        losses.append(float(loss))         # blocks until the step finishes
+        dt = time.time() - t0
+        if it == 0:
+            t_first = dt                   # compile + first execution
+        else:
+            t_warm += dt
         if it % log_every == 0:
+            # warm s/step excludes the first step: folding compile into the
+            # average overstates steady-state step time for the whole run
+            timing = (f"first+compile {t_first:.2f}s" if it == 0 else
+                      f"{t_warm / it:.2f}s/step warm, "
+                      f"first+compile {t_first:.2f}s")
             print(f"step {it:5d} loss {float(loss):.5f} "
-                  f"gnorm {float(gnorm):.3f} "
-                  f"({(time.time() - t0) / (it + 1):.2f}s/step)", flush=True)
+                  f"gnorm {float(gnorm):.3f} ({timing})", flush=True)
     if ckpt_path:
         ckpt.save(ckpt_path, {"params": params, "norm_in": vars(norm_in),
                               "norm_out": vars(norm_out)})
     return params, losses, (train, test, norm_in, norm_out)
+
+
+def predict_gnn(cfg: GNNConfig, params, samples, norm_in, norm_out):
+    """Denormalized full-cloud predictions, one compiled forward for all
+    samples.
+
+    Samples are partitioned with COMMON padding (``partition_samples``), so
+    the vmapped forward jit-compiles once and is reused — the old per-sample
+    padding dispatched a fresh eager vmap per sample (and would have
+    recompiled per shape if jitted). Owned-node predictions are reassembled
+    to global order and decoded with ``norm_out``.
+    """
+    psamples = pipe.partition_samples(cfg, samples, norm_in, norm_out)
+
+    @jax.jit
+    def fwd(p, stacked):
+        def one(b):
+            return mgn.apply(p, cfg, b["node_feats"], b["edge_feats"],
+                             b["senders"], b["receivers"],
+                             edge_mask=b["edge_mask"])
+        return jax.vmap(one)(stacked)
+
+    keys = ("node_feats", "edge_feats", "senders", "receivers", "edge_mask")
+    preds = []
+    for s, ps in zip(samples, psamples):
+        stacked = {k: jnp.asarray(ps.stacked[k]) for k in keys}
+        preds_p = np.asarray(fwd(params, stacked))
+        pred = np.zeros((s.graph.n_nodes, cfg.node_out), np.float32)
+        nodes = np.asarray(ps.padded["nodes_global"])
+        owned = np.asarray(ps.padded["owned_mask"]) > 0
+        pred[nodes[owned]] = preds_p[owned]
+        preds.append(norm_out.decode(pred))
+    return preds
 
 
 def eval_gnn(cfg: GNNConfig, params, samples, norm_in, norm_out) -> dict:
@@ -87,21 +205,8 @@ def eval_gnn(cfg: GNNConfig, params, samples, norm_in, norm_out) -> dict:
             "tau_z": [[], []]}
     names = list(errs)
     forces_true, forces_pred = [], []
-    for s in samples:
-        ps = pipe.partition_sample(cfg, s, norm_in, norm_out)
-        stacked = jax.tree_util.tree_map(jnp.asarray, ps.stacked)
-
-        def fwd(b):
-            return mgn.apply(params, cfg, b["node_feats"], b["edge_feats"],
-                             b["senders"], b["receivers"],
-                             edge_mask=b["edge_mask"])
-        preds_p = jax.vmap(fwd)(stacked)
-        # reassemble owned predictions to global order
-        pred = np.zeros((s.graph.n_nodes, cfg.node_out), np.float32)
-        nodes = np.asarray(ps.padded["nodes_global"])
-        owned = np.asarray(ps.padded["owned_mask"]) > 0
-        pred[nodes[owned]] = np.asarray(preds_p)[owned]
-        pred = norm_out.decode(pred)
+    preds = predict_gnn(cfg, params, samples, norm_in, norm_out)
+    for s, pred in zip(samples, preds):
         true = s.targets
         for i, nm in enumerate(names):
             num = np.linalg.norm(pred[:, i] - true[:, i])
@@ -165,13 +270,22 @@ def main():
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--samples", type=int, default=6)
     ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--graph-source", choices=("host", "graphx"),
+                    default=None,
+                    help="training-graph build: host cKDTree or the "
+                    "device-resident graphx pipeline (mesh-free)")
+    ap.add_argument("--shard-devices", type=int, default=None,
+                    help="cap partition-parallel width (1 = force the "
+                    "single-device scan path)")
     args = ap.parse_args()
     if args.arch == "xmgn-drivaer":
         cfg = get_config(args.arch)
         if args.reduced:
             cfg = cfg.reduced()
         params, losses, (train, test, ni, no) = train_gnn(
-            cfg, args.steps, args.samples, args.ckpt)
+            cfg, args.steps, args.samples, args.ckpt,
+            graph_source=args.graph_source,
+            shard_devices=args.shard_devices)
         metrics = eval_gnn(cfg, params, test, ni, no)
         print(json.dumps(metrics, indent=2))
     else:

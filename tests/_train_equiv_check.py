@@ -1,0 +1,157 @@
+"""Multi-device partition-parallel TRAINING checks, run in a subprocess with
+XLA_FLAGS=--xla_force_host_platform_device_count=8 (jax device count is
+locked at first init, so the main pytest process cannot do this).
+
+THE training-side statement of the paper's SIII-A equivalence claim, over
+pipeline-built data: one step's loss and gradients must agree to <= 1e-5
+across
+
+  * full-graph ``value_and_grad`` (the reference),
+  * sequential per-partition aggregation (``aggregate_gradients``),
+  * the single-device ``lax.scan`` (``scan_aggregate_gradients``),
+  * ``shard_map`` partition-parallel with ONE grad psum
+    (``shard_map_aggregate_gradients``) on 1, 2 and 4 fake devices,
+
+and a multi-step Adam training trajectory driven by the real trainer step
+(``launch.train.make_gnn_step_fn``) must stay equivalent between the
+full-graph, scan, and sharded executions.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import GNNConfig
+from repro.core.gradient_aggregation import (
+    aggregate_gradients, scan_aggregate_gradients,
+    shard_map_aggregate_gradients)
+from repro.data import pipeline as pipe
+from repro.launch.sharding import mesh_for_shards, shard_count_for, shard_put
+from repro.launch.train import make_gnn_step_fn, prepare_gnn_batch
+from repro.models import meshgraphnet as mgn
+from repro.optim.adam import AdamConfig, adam_init, adam_update
+
+TOL = 1e-5
+TRAJ_STEPS = 4
+
+
+def tree_maxdiff(a, b):
+    ds = jax.tree_util.tree_map(
+        lambda x, y: float(np.max(np.abs(np.asarray(x) - np.asarray(y)))),
+        a, b)
+    return max(jax.tree_util.tree_leaves(ds))
+
+
+def full_batch_of(cfg, s, norm_in, norm_out):
+    feats = norm_in.encode(s.node_feats).astype(np.float32)
+    targs = norm_out.encode(s.targets).astype(np.float32)
+    g = s.graph
+    return {
+        "node_feats": jnp.asarray(feats),
+        "edge_feats": jnp.asarray(g.edge_feats),
+        "senders": jnp.asarray(g.senders),
+        "receivers": jnp.asarray(g.receivers),
+        "targets": jnp.asarray(targs),
+        "loss_mask": jnp.ones(g.n_nodes, jnp.float32),
+    }
+
+
+def main():
+    assert len(jax.devices()) == 8, jax.devices()
+    assert shard_count_for(21) == 7          # paper config on an 8-dev host
+    assert shard_count_for(4, limit=1) == 1  # --shard-devices 1 forces scan
+
+    cfg = GNNConfig().reduced().replace(levels=(64, 128, 256), hidden=32,
+                                        n_mp_layers=2, halo=2,
+                                        n_partitions=4)
+    train, _, norm_in, norm_out = pipe.build_dataset(cfg, 3)
+    psamples = pipe.partition_samples(cfg, train, norm_in, norm_out)
+    params = mgn.init(jax.random.PRNGKey(0), cfg)
+
+    # ---- one step: full == sequential == scan == sharded(1/2/4) ----
+    s, ps = train[0], psamples[0]
+    fb = full_batch_of(cfg, s, norm_in, norm_out)
+    denom = ps.denom
+    full_loss, full_grads = jax.value_and_grad(
+        lambda p: mgn.loss_fn(p, cfg, fb, denom=denom))(params)
+
+    def grad_fn(p, b):
+        return jax.value_and_grad(
+            lambda q: mgn.loss_fn(q, cfg, b, denom=denom))(p)
+
+    stacked = jax.tree_util.tree_map(jnp.asarray, ps.stacked)
+    seq = [jax.tree_util.tree_map(lambda x: x[i], stacked)
+           for i in range(cfg.n_partitions)]
+    for name, (loss, grads) in {
+        "sequential": aggregate_gradients(grad_fn, params, seq),
+        "scan": jax.jit(lambda p, b: scan_aggregate_gradients(grad_fn, p, b)
+                        )(params, stacked),
+    }.items():
+        dl = abs(float(loss) - float(full_loss))
+        dg = tree_maxdiff(grads, full_grads)
+        assert dl <= TOL and dg <= TOL, (name, dl, dg)
+        print(f"{name} == full: dloss={dl:.2e} dgrads={dg:.2e}")
+
+    for n_shards in (1, 2, 4):
+        mesh = mesh_for_shards(n_shards)
+        f = shard_map_aggregate_gradients(mesh, grad_fn, jit=True)
+        loss, grads = f(params, shard_put(dict(ps.stacked), mesh))
+        dl = abs(float(loss) - float(full_loss))
+        dg = tree_maxdiff(grads, full_grads)
+        assert dl <= TOL and dg <= TOL, (n_shards, dl, dg)
+        print(f"shard_map P_dev={n_shards} == full: "
+              f"dloss={dl:.2e} dgrads={dg:.2e}")
+
+    # ---- N-step Adam trajectory: full vs scan vs sharded trainer ----
+    opt_cfg = AdamConfig(total_steps=TRAJ_STEPS)
+    fbs = [(full_batch_of(cfg, sm, norm_in, norm_out), pm.denom)
+           for sm, pm in zip(train, psamples)]
+
+    @jax.jit
+    def full_step(p, o, b, dn):
+        loss, grads = jax.value_and_grad(
+            lambda q: mgn.loss_fn(q, cfg, b, denom=dn))(p)
+        p, o, _ = adam_update(opt_cfg, grads, o, p)
+        return p, o, loss
+
+    def run_full():
+        p, o, ls = params, adam_init(params), []
+        for it in range(TRAJ_STEPS):
+            b, dn = fbs[it % len(fbs)]
+            p, o, l = full_step(p, o, b, jnp.asarray(dn))
+            ls.append(float(l))
+        return p, ls
+
+    def run_trainer(mesh):
+        step = make_gnn_step_fn(cfg, opt_cfg, mesh=mesh)
+        bs = [prepare_gnn_batch(pm, mesh) for pm in psamples]
+        p, o, ls = params, adam_init(params), []
+        for it in range(TRAJ_STEPS):
+            st, dn = bs[it % len(bs)]
+            p, o, l, _ = step(p, o, st, dn)
+            ls.append(float(l))
+        return p, ls
+
+    p_full, l_full = run_full()
+    p_scan, l_scan = run_trainer(None)
+    for n_shards in (2, 4):
+        p_sh, l_sh = run_trainer(mesh_for_shards(n_shards))
+        dl = max(abs(a - b) for a, b in zip(l_sh, l_scan))
+        dp = tree_maxdiff(p_sh, p_scan)
+        assert dl <= TOL and dp <= TOL, (n_shards, dl, dp)
+        print(f"trajectory shard{n_shards} == scan over {TRAJ_STEPS} steps: "
+              f"dloss={dl:.2e} dparams={dp:.2e}")
+    dl = max(abs(a - b) for a, b in zip(l_scan, l_full))
+    dp = tree_maxdiff(p_scan, p_full)
+    assert dl <= TOL and dp <= TOL, (dl, dp)
+    print(f"trajectory scan == full-graph over {TRAJ_STEPS} steps: "
+          f"dloss={dl:.2e} dparams={dp:.2e}")
+
+    print("ALL_OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,194 @@
+"""Partition-parallel TRAINING equivalence (paper SIII-A, training side) and
+the trainer hot-path bugfixes.
+
+The multi-device headline — full-graph loss/gradients == sequential
+partitioned == single-device scan == shard_map over 1/2/4 fake devices, plus
+an N-step Adam trajectory — runs in a subprocess (``_train_equiv_check.py``;
+the device count is locked at first jax init). The in-process tests pin the
+satellites: single-pass ``partition_samples`` is bit-identical to the old
+discover-then-rebuild double pass, ``predict_gnn``'s one-jit eval matches
+the eager per-sample reference, the graphx-built (mesh-free) training graph
+equals the host cKDTree build, and a ``train_gnn`` checkpoint served by
+``GNNServer.from_checkpoint`` matches the eval path's denormalized outputs
+on the same geometry.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import GNNConfig
+from repro.core.graph_build import node_input_features, sample_surface
+from repro.core.multiscale import build_multiscale_from_points
+from repro.data import geometry as geo
+from repro.data import pipeline as pipe
+from repro.launch.serve_gnn import GNNServer
+from repro.launch.train import (eval_gnn, make_gnn_step_fn, predict_gnn,
+                                train_gnn)
+from repro.models import meshgraphnet as mgn
+from repro.optim.adam import AdamConfig, adam_init
+from test_distributed import run_script
+
+
+def _cfg(levels=(64, 128, 256), n_partitions=4):
+    return GNNConfig().reduced().replace(levels=levels, hidden=32,
+                                         n_mp_layers=2, halo=2,
+                                         n_partitions=n_partitions)
+
+
+def test_sharded_train_equivalence_multi_device():
+    """Headline: full == sequential == scan == shard_map (1/2/4 fake
+    devices) for one step's loss/grads AND an N-step Adam trajectory."""
+    out = run_script("_train_equiv_check.py")
+    assert "ALL_OK" in out
+
+
+def test_partition_samples_matches_double_pass_bitwise():
+    """The single-partitioning-pass batch builder reproduces the old
+    partition-twice-per-sample trainer preprocessing bit for bit."""
+    cfg = _cfg()
+    train, _, ni, no = pipe.build_dataset(cfg, 3)
+    new = pipe.partition_samples(cfg, train, ni, no)
+    # the seed trainer's double pass: discover pad dims, then rebuild
+    first = [pipe.partition_sample(cfg, s, ni, no) for s in train]
+    nmax = max(p.stacked["node_feats"].shape[1] for p in first)
+    emax = max(p.stacked["edge_feats"].shape[1] for p in first)
+    old = [pipe.partition_sample(cfg, s, ni, no, pad_nodes=nmax,
+                                 pad_edges=emax) for s in train]
+    assert len(new) == len(old)
+    for a, b in zip(new, old):
+        assert a.denom == b.denom and a.n_nodes == b.n_nodes
+        for k in a.stacked:
+            np.testing.assert_array_equal(a.stacked[k], b.stacked[k])
+        for k in a.padded:
+            np.testing.assert_array_equal(a.padded[k], b.padded[k])
+
+
+def test_single_device_step_matches_seed_trainer_bitwise():
+    """``make_gnn_step_fn(mesh=None)`` is the seed trainer's step verbatim:
+    same scan, same adam — losses and params bitwise equal."""
+    from repro.core.gradient_aggregation import scan_aggregate_gradients
+    from repro.optim.adam import adam_update
+
+    cfg = _cfg(levels=(64, 128), n_partitions=2)
+    train, _, ni, no = pipe.build_dataset(cfg, 2)
+    psamples = pipe.partition_samples(cfg, train, ni, no)
+    params = mgn.init(jax.random.PRNGKey(0), cfg)
+    opt_cfg = AdamConfig(total_steps=2)
+
+    @jax.jit
+    def seed_step(params, opt, stacked, denom):
+        def grad_fn(p, b):
+            return jax.value_and_grad(
+                lambda q: mgn.loss_fn(q, cfg, b, denom=denom))(p)
+        loss, grads = scan_aggregate_gradients(grad_fn, params, stacked)
+        params, opt, metrics = adam_update(opt_cfg, grads, opt, params)
+        return params, opt, loss, metrics["grad_norm"]
+
+    new_step = make_gnn_step_fn(cfg, opt_cfg, mesh=None)
+    p_a, o_a = params, adam_init(params)
+    p_b, o_b = params, adam_init(params)
+    for it in range(2):
+        ps = psamples[it % len(psamples)]
+        stacked = jax.tree_util.tree_map(jnp.asarray, ps.stacked)
+        denom = jnp.asarray(ps.denom)
+        p_a, o_a, l_a, g_a = seed_step(p_a, o_a, stacked, denom)
+        p_b, o_b, l_b, g_b = new_step(p_b, o_b, stacked, denom)
+        assert float(l_a) == float(l_b) and float(g_a) == float(g_b)
+    for x, y in zip(jax.tree_util.tree_leaves(p_a),
+                    jax.tree_util.tree_leaves(p_b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_predict_gnn_matches_eager_reference():
+    """The jitted common-padding eval forward == the old eager per-sample
+    vmap with per-sample padding (reassembled + denormalized)."""
+    cfg = _cfg()
+    train, test, ni, no = pipe.build_dataset(cfg, 3)
+    samples = train + test
+    params = mgn.init(jax.random.PRNGKey(1), cfg)
+    preds = predict_gnn(cfg, params, samples, ni, no)
+
+    for s, pred in zip(samples, preds):
+        ps = pipe.partition_sample(cfg, s, ni, no)   # per-sample padding
+        stacked = jax.tree_util.tree_map(jnp.asarray, ps.stacked)
+
+        def fwd(b):
+            return mgn.apply(params, cfg, b["node_feats"], b["edge_feats"],
+                             b["senders"], b["receivers"],
+                             edge_mask=b["edge_mask"])
+        preds_p = jax.vmap(fwd)(stacked)
+        ref = np.zeros((s.graph.n_nodes, cfg.node_out), np.float32)
+        nodes = np.asarray(ps.padded["nodes_global"])
+        owned = np.asarray(ps.padded["owned_mask"]) > 0
+        ref[nodes[owned]] = np.asarray(preds_p)[owned]
+        ref = no.decode(ref)
+        np.testing.assert_allclose(pred, ref, atol=1e-5)
+
+    metrics = eval_gnn(cfg, params, test, ni, no)
+    assert np.isfinite(metrics["force_r2"])
+    assert all(np.isfinite(m["rel_l2"]) for k, m in metrics.items()
+               if k != "force_r2")
+
+
+def test_graphx_training_graph_matches_host():
+    """The mesh-free (device hash-grid) training-graph build produces the
+    same edge set, level tags, features and targets as the host cKDTree
+    build — training is graph-source-agnostic."""
+    cfg = _cfg()
+    sh = pipe.build_sample(cfg, 0, source="host")
+    sx = pipe.build_sample(cfg, 0, source="graphx")
+    np.testing.assert_array_equal(sh.node_feats, sx.node_feats)
+    np.testing.assert_array_equal(sh.targets, sx.targets)
+    np.testing.assert_array_equal(sh.graph.positions, sx.graph.positions)
+    host = {(s, r): l for s, r, l in zip(sh.graph.senders.tolist(),
+                                         sh.graph.receivers.tolist(),
+                                         sh.graph.level_of_edge.tolist())}
+    dev = {(s, r): l for s, r, l in zip(sx.graph.senders.tolist(),
+                                        sx.graph.receivers.tolist(),
+                                        sx.graph.level_of_edge.tolist())}
+    assert host == dev
+    # edge features follow the (reordered) edge list
+    ref = sh.graph.positions[sx.graph.senders] \
+        - sh.graph.positions[sx.graph.receivers]
+    np.testing.assert_allclose(sx.graph.edge_feats[:, :3], ref, atol=1e-6)
+
+    import pytest
+    with pytest.raises(ValueError, match="graph_source"):
+        pipe.build_sample(cfg, 0, source="bogus")
+
+
+def test_checkpoint_roundtrip_server_matches_eval(tmp_path):
+    """End to end: a ``train_gnn --ckpt`` checkpoint loaded by
+    ``GNNServer.from_checkpoint`` serves denormalized predictions matching
+    the eval path (``predict_gnn``) on the same geometry and cloud."""
+    cfg = _cfg()
+    path = str(tmp_path / "gnn.msgpack")
+    params, losses, (train, test, ni, no) = train_gnn(
+        cfg, steps=2, n_samples=3, ckpt_path=path, log_every=100,
+        shard_devices=1)
+    assert np.isfinite(losses).all()
+
+    n = max(cfg.levels)
+    gparams = geo.sample_params(11)
+    verts, faces = geo.car_surface(gparams)
+    server = GNNServer.from_checkpoint(path, cfg, (n,), max_batch=1,
+                                       seed=5, reference=(verts, faces))
+    [res] = server.serve([(verts, faces, n)])
+    assert res.error is None
+
+    # rebuild the exact cloud the server sampled (per-(seed, rid) rng)
+    rng = np.random.default_rng((5, res.request_id + 1))
+    pts, nrm = sample_surface(verts, faces, n, rng)
+    np.testing.assert_array_equal(res.points, pts)
+    g = build_multiscale_from_points(pts, cfg.levels, cfg.k_neighbors,
+                                     normals=nrm)
+    sample = pipe.GraphSample(
+        graph=g, node_feats=node_input_features(pts, nrm, cfg.fourier_freqs),
+        targets=geo.surface_fields(pts, nrm, gparams), sample_id=0)
+    [want] = predict_gnn(cfg, params, [sample], ni, no)
+    np.testing.assert_allclose(res.fields, want, atol=1e-4)
+    # and they are the trained weights, not a fresh init
+    fresh = GNNServer(cfg, (n,), max_batch=1, seed=5,
+                      reference=(verts, faces))
+    [other] = fresh.serve([(verts, faces, n)])
+    assert not np.allclose(res.fields, other.fields, atol=1e-4)
