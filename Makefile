@@ -1,7 +1,7 @@
 PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: verify test bench-graph bench-serve bench-train smoke
+.PHONY: verify test bench-graph bench-serve bench-train smoke trace
 
 # tier-1 gate: full test suite + graph-build perf smoke
 verify: test bench-graph
@@ -23,3 +23,11 @@ bench-train:
 # quickest end-to-end signal: serving example on a reduced model
 smoke:
 	$(PY) examples/realtime_inference.py
+
+# capture a serving trace: spans (chrome://tracing) + Prometheus metrics
+# land in traces/serve/; see README "Observability"
+trace:
+	$(PY) -m repro.launch.serve_gnn --requests 8 --buckets 256 --reduced \
+		--max-batch 2 --trace-dir traces/serve
+	$(PY) -m repro.launch.train --arch xmgn-drivaer --reduced --steps 5 \
+		--samples 2 --trace-dir traces/train

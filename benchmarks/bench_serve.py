@@ -101,6 +101,9 @@ def bench_flush_modes(cfg, reqs, bucket, max_batch, reference, reps, rows,
             "p50_ms": r["p50_ms"], "p95_ms": r["p95_ms"],
             "throughput_rps": r["throughput_rps"],
             "mean_batch": r["mean_batch"],
+            # per-stage breakdown (repro.telemetry histograms behind
+            # ServerStats): where a request's wall time actually goes
+            "stages": r["stages"],
         }
     speedup = best["async"]["throughput_rps"] / \
         max(best["sync"]["throughput_rps"], 1e-9)
@@ -251,6 +254,15 @@ def main():
                     rows, report)
     bench_autoscale(cfg, reference, args.max_batch, args.smoke, rows,
                     report)
+    if args.smoke:
+        # CI contract: the JSON record carries the per-stage breakdown
+        for key in ("sync", "async"):
+            stages = report["flush"][key]["stages"]
+            assert stages, f"flush[{key}] has no stage breakdown"
+            for st, s in stages.items():
+                assert {"count", "mean_ms", "p50_ms", "p95_ms",
+                        "total_s"} <= set(s), (key, st, s)
+            assert any(s["count"] > 0 for s in stages.values()), stages
     emit(rows)
     if args.json:
         with open(args.json, "w") as f:

@@ -38,17 +38,33 @@ import numpy as np
 from repro.configs.base import GNNConfig
 from repro.data import pipeline as pipe
 from repro.launch.sharding import mesh_for_shards
-from repro.launch.train import make_gnn_step_fn, prepare_gnn_batch
+from repro.launch.train import eval_gnn, make_gnn_step_fn, prepare_gnn_batch
 from repro.models import meshgraphnet as mgn
 from repro.optim.adam import AdamConfig, adam_init
+from repro.telemetry import Histogram, default_latency_buckets
 
 from common import emit
+
+
+def _summary(h: Histogram) -> dict:
+    """Same shape as ``ServerStats.stage_report`` entries."""
+    n = h.count
+    return {"count": n, "mean_ms": h.mean * 1e3,
+            "p50_ms": (h.percentile(50) * 1e3) if n else 0.0,
+            "p95_ms": (h.percentile(95) * 1e3) if n else 0.0,
+            "total_s": h.sum}
 
 
 def bench_mode(cfg, opt_cfg, params, opt, psamples, n_shards, iters):
     mesh = mesh_for_shards(n_shards) if n_shards > 1 else None
     step = make_gnn_step_fn(cfg, opt_cfg, mesh=mesh)
-    batches = [prepare_gnn_batch(ps, mesh) for ps in psamples]
+    h_prep = Histogram("prepare", default_latency_buckets())
+    h_step = Histogram("step", default_latency_buckets())
+    batches = []
+    for ps in psamples:
+        t0 = time.perf_counter()
+        batches.append(prepare_gnn_batch(ps, mesh))
+        h_prep.observe(time.perf_counter() - t0)
 
     t0 = time.perf_counter()
     _, _, loss, _ = step(params, opt, *batches[0])
@@ -61,9 +77,13 @@ def bench_mode(cfg, opt_cfg, params, opt, psamples, n_shards, iters):
         t0 = time.perf_counter()
         _, _, loss, _ = step(params, opt, stacked, denom)
         float(loss)
-        ts.append(time.perf_counter() - t0)
+        dt = time.perf_counter() - t0
+        h_step.observe(dt)
+        ts.append(dt)
     return {"n_shards": n_shards, "cold_s": cold_s,
-            "warm_s": float(np.median(ts)), "loss": loss0}
+            "warm_s": float(np.median(ts)), "loss": loss0,
+            "stages": {"prepare": _summary(h_prep),
+                       "step": _summary(h_step)}}
 
 
 def main():
@@ -78,8 +98,15 @@ def main():
     levels = (64, 128, 256) if args.smoke else (256, 512, 1024)
     cfg = GNNConfig().reduced().replace(levels=levels, n_partitions=8,
                                         hidden=32 if args.smoke else 64)
+    h_data = Histogram("data", default_latency_buckets())
+    h_part = Histogram("partition", default_latency_buckets())
+    h_eval = Histogram("eval", default_latency_buckets())
+    t0 = time.perf_counter()
     train, _, ni, no = pipe.build_dataset(cfg, 2)
+    h_data.observe(time.perf_counter() - t0)
+    t0 = time.perf_counter()
     psamples = pipe.partition_samples(cfg, train, ni, no)
+    h_part.observe(time.perf_counter() - t0)
     opt_cfg = AdamConfig(total_steps=100)
     params = mgn.init(jax.random.PRNGKey(0), cfg)
     opt = adam_init(params)
@@ -95,6 +122,12 @@ def main():
         dl = abs(r["loss"] - results[0]["loss"])
         assert dl <= 1e-5, (n_shards, dl)
 
+    # eval breakdown: one compiled common-padding forward over the samples
+    params0 = mgn.init(jax.random.PRNGKey(0), cfg)
+    t0 = time.perf_counter()
+    eval_gnn(cfg, params0, train, ni, no)
+    h_eval.observe(time.perf_counter() - t0)
+
     emit(rows)
     report = {
         "config": {"levels": list(levels), "n_partitions": cfg.n_partitions,
@@ -105,9 +138,20 @@ def main():
                  "measures dispatch overhead, not strong scaling — losses "
                  "asserted equal across modes to 1e-5"),
         "results": results,
+        "stages": {"data": _summary(h_data), "partition": _summary(h_part),
+                   "eval": _summary(h_eval)},
         "max_loss_diff": max(abs(r["loss"] - results[0]["loss"])
                              for r in results),
     }
+    if args.smoke:
+        # CI contract: every mode's record carries its stage breakdown
+        for r in results:
+            for st in ("prepare", "step"):
+                s = r["stages"][st]
+                assert s["count"] > 0 and {"mean_ms", "p50_ms", "p95_ms",
+                                           "total_s"} <= set(s), (st, s)
+        assert report["stages"]["data"]["count"] == 1
+        assert report["stages"]["eval"]["count"] == 1
     if args.json:
         with open(args.json, "w") as f:
             json.dump(report, f, indent=2, sort_keys=True)

@@ -171,6 +171,15 @@ class GNNConfig:
     bucket_quantiles: Tuple[float, ...] = (0.5, 0.9)  # refit ladder targets
     bucket_refit_every: int = 32       # submits between ladder refits
     bucket_hist_len: int = 1024        # request-size histogram window
+    # observability (repro.telemetry): the span tracer + host profiler
+    # annotations are gated by `telemetry` (a disabled tracer is a no-op
+    # object — zero-cost-when-off); `trace_dir` is where exports land
+    # (trace.jsonl, trace_chrome.json, metrics.prom, metrics.json);
+    # `profile_capture` additionally records a full jax.profiler trace
+    # under <trace_dir>/jax_profile. CLI: --telemetry / --trace-dir.
+    telemetry: bool = False
+    trace_dir: str = ""
+    profile_capture: bool = False
     remat: bool = True             # activation checkpointing (paper SV-D)
     dtype: str = "float32"
     source: str = "arXiv X-MeshGraphNet (NVIDIA 2024)"

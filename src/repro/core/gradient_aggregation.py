@@ -139,7 +139,8 @@ def shard_map_aggregate_gradients(mesh, grad_fn: Callable,
         params_v = tree_pvary(params, axes)
         loss, grads = scan_aggregate_gradients(grad_fn, params_v, stacked,
                                                varying_axes=axes)
-        return jax.lax.psum(loss, axes), jax.lax.psum(grads, axes)
+        with jax.named_scope("train/psum"):
+            return jax.lax.psum(loss, axes), jax.lax.psum(grads, axes)
 
     fn = shard_map(local, mesh=mesh, in_specs=(P(), P(axes)),
                    out_specs=(P(), P()))

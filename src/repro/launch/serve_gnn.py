@@ -81,6 +81,7 @@ Usage:
 from __future__ import annotations
 
 import argparse
+import logging
 import threading
 import time
 import warnings
@@ -100,6 +101,16 @@ from repro.graphx.multiscale import MultiscaleSpec
 from repro.graphx.pipeline import make_batched_infer_fn
 from repro.launch.sharding import mesh_for_shards, shard_put
 from repro.models import meshgraphnet
+from repro.telemetry import (MetricsRegistry, Telemetry,
+                             default_size_buckets, warn_once)
+
+log = logging.getLogger(__name__)
+
+# serving-lifecycle stages recorded per batch/request (see ServerStats
+# stage histograms + the per-request trace spans): submit -> queue_wait ->
+# bucket_route -> prepare -> dispatch -> device_wait -> harvest -> result
+SERVE_STAGES = ("queue_wait", "prepare", "dispatch", "device_wait",
+                "harvest", "compile")
 
 
 def _level_sizes(n_points: int, n_levels: int) -> Tuple[int, ...]:
@@ -167,11 +178,22 @@ class Result:
 
 @dataclass
 class ServerStats:
-    """Serving counters. Mutations and :meth:`report` both synchronize on
-    ``lock`` — the background worker appends while clients introspect, so
-    ``report`` snapshots under the lock instead of iterating live lists."""
-    latencies_s: List[float] = field(default_factory=list)
-    batch_sizes: List[int] = field(default_factory=list)
+    """Serving counters + bounded streaming timing stats.
+
+    Latencies, batch sizes and per-stage timings stream into fixed-bucket
+    histograms in ``metrics`` (a :class:`repro.telemetry.MetricsRegistry`)
+    — O(n_buckets) memory under unbounded traffic, unlike the append-
+    forever lists this replaced (a real leak under sustained load). A
+    bounded recent window (``recent_cap`` newest values) is kept for
+    debugging and exact small-run assertions; :attr:`latencies_s` /
+    :attr:`batch_sizes` expose it with the pre-histogram names.
+
+    Scalar counter mutations and :meth:`report` synchronize on ``lock``
+    (the background worker appends while clients introspect); histograms
+    carry their own per-metric locks.
+    """
+    metrics: MetricsRegistry = field(default_factory=MetricsRegistry)
+    recent_cap: int = 1024
     t_serving: float = 0.0
     overflow_requests: int = 0         # clouds that exceeded a grid's cap
     rejected_requests: int = 0         # returned with Result.error set
@@ -186,11 +208,61 @@ class ServerStats:
     lock: threading.Lock = field(default_factory=threading.Lock,
                                  repr=False, compare=False)
 
-    def reset(self):
-        """Zero every counter (keeps the lock); used between bench phases."""
+    def __post_init__(self):
+        self._recent_lat: deque = deque(maxlen=self.recent_cap)
+        self._recent_batch: deque = deque(maxlen=self.recent_cap)
+        self._bind_metrics()
+
+    def _bind_metrics(self):
+        m = self.metrics
+        self._h_latency = m.histogram(
+            "serve_request_latency_seconds",
+            help="submit->result latency per served request")
+        self._h_batch = m.histogram(
+            "serve_batch_size", buckets=default_size_buckets(1, 4096),
+            help="requests per dispatched microbatch")
+        self._h_stage = {
+            s: m.histogram(f"serve_{s}_seconds",
+                           help=f"serving stage time: {s}")
+            for s in SERVE_STAGES}
+
+    # ------------------------------------------------------------ recording
+
+    @property
+    def latencies_s(self) -> List[float]:
+        """Recent-window request latencies (bounded; newest ``recent_cap``)."""
         with self.lock:
-            self.latencies_s = []
-            self.batch_sizes = []
+            return list(self._recent_lat)
+
+    @property
+    def batch_sizes(self) -> List[int]:
+        """Recent-window dispatched batch sizes (bounded)."""
+        with self.lock:
+            return list(self._recent_batch)
+
+    def record_latency(self, lat_s: float):
+        self._h_latency.observe(lat_s)
+        with self.lock:
+            self._recent_lat.append(lat_s)
+
+    def record_batch(self, size: int):
+        self._h_batch.observe(size)
+        with self.lock:
+            self._recent_batch.append(int(size))
+
+    def record_stage(self, stage: str, dt_s: float):
+        """One observation of a lifecycle stage (see ``SERVE_STAGES``)."""
+        h = self._h_stage.get(stage)
+        if h is None:
+            h = self._h_stage[stage] = self.metrics.histogram(
+                f"serve_{stage}_seconds",
+                help=f"serving stage time: {stage}")
+        h.observe(dt_s)
+
+    def reset(self):
+        """Zero every counter and histogram (keeps the lock and registry
+        identity); used between bench phases."""
+        with self.lock:
             self.t_serving = 0.0
             self.overflow_requests = 0
             self.rejected_requests = 0
@@ -202,11 +274,28 @@ class ServerStats:
             self.grown_buckets = 0
             self.padding_points = 0
             self.requested_points = 0
+            self._recent_lat.clear()
+            self._recent_batch.clear()
+        self.metrics.reset()
+        self._bind_metrics()
+
+    def stage_report(self) -> dict:
+        """Per-stage latency breakdown from the streaming histograms:
+        ``{stage: {count, mean_ms, p50_ms, p95_ms, total_s}}``."""
+        out = {}
+        for s, h in sorted(self._h_stage.items()):
+            n = h.count
+            out[s] = {
+                "count": n,
+                "mean_ms": h.mean * 1e3,
+                "p50_ms": (h.percentile(50) * 1e3) if n else 0.0,
+                "p95_ms": (h.percentile(95) * 1e3) if n else 0.0,
+                "total_s": h.sum,
+            }
+        return out
 
     def report(self) -> dict:
         with self.lock:                # snapshot: the worker may be appending
-            lats = list(self.latencies_s)
-            batches = list(self.batch_sizes)
             t_serving = self.t_serving
             counters = {
                 "overflow_requests": self.overflow_requests,
@@ -220,14 +309,16 @@ class ServerStats:
             }
             padded = self.padding_points
             requested = self.requested_points
-        lat = np.asarray(lats) if lats else np.zeros((1,))
+        n = self._h_latency.count
+        # empty case: explicit zeros, never percentiles of fabricated data
         rep = {
-            "requests": len(lats),
-            "p50_ms": float(np.percentile(lat, 50) * 1e3),
-            "p95_ms": float(np.percentile(lat, 95) * 1e3),
-            "mean_batch": float(np.mean(batches)) if batches else 0.0,
-            "throughput_rps": len(lats) / max(t_serving, 1e-9),
+            "requests": n,
+            "p50_ms": self._h_latency.percentile(50) * 1e3 if n else 0.0,
+            "p95_ms": self._h_latency.percentile(95) * 1e3 if n else 0.0,
+            "mean_batch": self._h_batch.mean,
+            "throughput_rps": n / max(t_serving, 1e-9),
             "padding_waste_frac": padded / max(padded + requested, 1),
+            "stages": self.stage_report(),
         }
         rep.update(counters)
         return rep
@@ -275,7 +366,7 @@ class GNNServer:
                  reference=None, check_requests: bool = True,
                  reject_overflow: bool = False, shard_devices: int = 1,
                  shard_pad_factor: float = 1.3, async_flush: bool = True,
-                 donate: bool = True):
+                 donate: bool = True, telemetry: Optional[Telemetry] = None):
         if agg_impl is not None:
             cfg = cfg.replace(agg_impl=agg_impl)
         if cfg.agg_impl == "pallas" and int(shard_devices) == 1:
@@ -328,7 +419,12 @@ class GNNServer:
         self._refit_count = 0
         self._tick = 0                        # LRU clock for bucket eviction
         self._plan_sizes: set = set()         # sizes in the active drain plan
-        self.stats = ServerStats()
+        # telemetry: span tracer gated by cfg.telemetry (no-op object when
+        # off), metrics registry always live — it backs ServerStats
+        self.telemetry = (telemetry if telemetry is not None
+                          else Telemetry.from_config(cfg))
+        self.stats = ServerStats(metrics=self.telemetry.metrics)
+        self._warn_once = warn_once(log)
         self._next_id = 0
         self._cond = threading.Condition()
         self._serve_lock = threading.Lock()
@@ -458,18 +554,24 @@ class GNNServer:
             return sizes[-1]
         with self.stats.lock:
             self.stats.oversize_requests += 1
+        # warn-once per (condition, ladder max): sustained oversize traffic
+        # logs one WARNING (+ a stdlib warning for test/CLI visibility), not
+        # one line per request — repeats are DEBUG-logged and counted
         if self.reject_overflow:
-            warnings.warn(
-                f"request for {n_points} points exceeds the largest bucket "
-                f"({sizes[-1]}) and will be REJECTED (reject_overflow is "
-                "set); use bucket_sizes='auto' to grow the ladder instead")
+            msg = (f"request for {n_points} points exceeds the largest "
+                   f"bucket ({sizes[-1]}) and will be REJECTED "
+                   "(reject_overflow is set); use bucket_sizes='auto' to "
+                   "grow the ladder instead")
+            if self._warn_once(("oversize_reject", sizes[-1]), msg):
+                warnings.warn(msg)
         else:
-            warnings.warn(
-                f"request for {n_points} points exceeds the largest bucket "
-                f"({sizes[-1]}): serving a DOWNSAMPLED {sizes[-1]}-point "
-                "cloud. Pass reject_overflow=True to reject oversize "
-                "requests, or bucket_sizes='auto' to let the ladder grow "
-                "instead")
+            msg = (f"request for {n_points} points exceeds the largest "
+                   f"bucket ({sizes[-1]}): serving a DOWNSAMPLED "
+                   f"{sizes[-1]}-point cloud. Pass reject_overflow=True to "
+                   "reject oversize requests, or bucket_sizes='auto' to "
+                   "let the ladder grow instead")
+            if self._warn_once(("oversize_downsample", sizes[-1]), msg):
+                warnings.warn(msg)
         return sizes[-1]
 
     def _refit_ladder_locked(self):
@@ -534,9 +636,12 @@ class GNNServer:
         the background worker (if running)."""
         # geometry copies can be multi-MB: do them OUTSIDE the lock so
         # producers never stall waiters / the worker on an array copy
+        t0 = time.perf_counter()
         verts = np.asarray(verts, np.float32)
         faces = np.asarray(faces)
+        t_route = time.perf_counter()
         bucket = self._route(n_points, mutate=True)   # auto mode may grow
+        t_routed = time.perf_counter()
         with self._cond:
             rid = self._next_id
             self._next_id += 1
@@ -552,6 +657,13 @@ class GNNServer:
                     self._refit_count = 0
                     self._refit_ladder_locked()
             self._cond.notify_all()
+        if self.telemetry.enabled:
+            tracer = self.telemetry.tracer
+            tracer.record_span("submit", t0, time.perf_counter(),
+                               trace_id=f"req-{rid}", bucket=bucket,
+                               n_points=n_points)
+            tracer.record_span("bucket_route", t_route, t_routed,
+                               trace_id=f"req-{rid}", bucket=bucket)
         return rid
 
     def pending(self) -> int:
@@ -600,11 +712,14 @@ class GNNServer:
         if dropped:
             with self.stats.lock:
                 self.stats.overflow_requests += 1
-            warnings.warn(
-                f"request {rid}: geometry overflows bucket {b.n_points}'s "
-                f"calibrated grid ({dropped} candidate slots dropped) — "
-                "neighbor sets may be approximate; recalibrate the server "
-                "with a representative reference geometry")
+            msg = (f"request {rid}: geometry overflows bucket "
+                   f"{b.n_points}'s calibrated grid ({dropped} candidate "
+                   "slots dropped) — neighbor sets may be approximate; "
+                   "recalibrate the server with a representative reference "
+                   "geometry")
+            # one WARNING per (bucket, condition), not one per request
+            if self._warn_once(("grid_overflow", b.n_points), msg):
+                warnings.warn(msg)
         return dropped
 
     def _reject(self, req: Request, n_points: int, reason: str,
@@ -626,6 +741,7 @@ class GNNServer:
         Pure host numpy — in the async flush this is the work that overlaps
         the previous batch's in-flight XLA call.
         """
+        t0 = time.perf_counter()
         results: List[Result] = []
         ok_reqs, samples = [], []
         for req in reqs:
@@ -653,6 +769,13 @@ class GNNServer:
                 continue
             ok_reqs.append(req)
             samples.append((pts, nrm))
+        t1 = time.perf_counter()
+        if record:
+            self.stats.record_stage("prepare", t1 - t0)
+        if self.telemetry.enabled:
+            self.telemetry.tracer.record_span(
+                "prepare", t0, t1, bucket=b.n_points, batch=len(reqs),
+                ok=len(ok_reqs), rids=[r.request_id for r in reqs])
         return results, ok_reqs, samples
 
     def _dispatch(self, b: Bucket, pre: List[Result], ok_reqs: List[Request],
@@ -663,6 +786,21 @@ class GNNServer:
         dispatch) so the caller can do host work for the next batch while
         this one runs.
         """
+        t0 = time.perf_counter()
+        with self.telemetry.annotate("serve/dispatch"):
+            fl = self._dispatch_inner(b, pre, ok_reqs, samples, record)
+        t1 = time.perf_counter()
+        if record and ok_reqs:
+            self.stats.record_stage("dispatch", t1 - t0)
+        if self.telemetry.enabled:
+            self.telemetry.tracer.record_span(
+                "dispatch", t0, t1, bucket=b.n_points, batch=len(ok_reqs),
+                rids=[r.request_id for r in ok_reqs])
+        return fl
+
+    def _dispatch_inner(self, b: Bucket, pre: List[Result],
+                        ok_reqs: List[Request], samples,
+                        record: bool) -> _InFlight:
         if not ok_reqs:
             return _InFlight(bucket=b, results=pre, ok_reqs=[], out=None,
                              pts=np.zeros((0,)), record=record)
@@ -715,13 +853,21 @@ class GNNServer:
         """
         cache_size = getattr(fn, "_cache_size", None)
         before = cache_size() if cache_size is not None else None
-        out = fn(*args)
+        t0 = time.perf_counter()
+        with self.telemetry.annotate(f"serve/call_b{b.n_points}"):
+            out = fn(*args)
         if before is not None:
             grew = cache_size() - before
             if grew > 0:
+                t1 = time.perf_counter()
                 b.compiles += grew
                 with self.stats.lock:
                     self.stats.bucket_compiles += grew
+                # the call's wall time on a cache miss IS the compile (trace
+                # + lower + compile; device execution stays async)
+                self.stats.record_stage("compile", t1 - t0)
+                self.telemetry.tracer.record_span(
+                    "compile", t0, t1, bucket=b.n_points, compiles=grew)
         return out
 
     def _padding_of(self, b: Bucket, req: Request) -> Tuple[int, int]:
@@ -731,12 +877,30 @@ class GNNServer:
         return asked, b.n_points - asked
 
     def _harvest(self, fl: _InFlight) -> List[Result]:
-        """Sync stage: block on the device output, build Results, record."""
+        """Sync stage: block on the device output, build Results, record.
+
+        The ``block_until_ready`` wall time is the ``device_wait`` stage —
+        how long the host actually stalled on XLA (at steady state under
+        the async flush this is the device-bound part of the pipeline);
+        everything after it (host gather/copy/bookkeeping) is ``harvest``.
+        """
         results = list(fl.results)
         if fl.out is None:
             return results
         b, record = fl.bucket, fl.record
-        out = np.asarray(jax.block_until_ready(fl.out))
+        t0 = time.perf_counter()
+        with self.telemetry.annotate("serve/device_wait"):
+            out_dev = jax.block_until_ready(fl.out)
+        t_sync = time.perf_counter()
+        if record:
+            self.stats.record_stage("device_wait", t_sync - t0)
+        tel_on = self.telemetry.enabled
+        tracer = self.telemetry.tracer
+        if tel_on:
+            tracer.record_span(
+                "device_wait", t0, t_sync, bucket=b.n_points,
+                batch=len(fl.ok_reqs))
+        out = np.asarray(out_dev)
         if b.sspec is not None:
             [req] = fl.ok_reqs
             # the host-side gather back into one cloud is part of what the
@@ -749,12 +913,19 @@ class GNNServer:
                                   bucket=b.n_points, batch_size=1))
             if record:
                 asked, waste = self._padding_of(b, req)
+                self.stats.record_latency(lat)
+                self.stats.record_batch(1)
+                self.stats.record_stage("harvest", t_done - t_sync)
                 with self.stats.lock:
-                    self.stats.latencies_s.append(lat)
-                    self.stats.batch_sizes.append(1)
                     self.stats.requested_points += asked
                     self.stats.padding_points += waste
                 b.served += 1
+            if tel_on:
+                tracer.record_span("harvest", t_sync, t_done,
+                                   bucket=b.n_points, batch=1)
+                tracer.record_span("request", req.t_submit or t_done,
+                                   t_done, trace_id=f"req-{req.request_id}",
+                                   bucket=b.n_points)
             return results
         t_done = time.perf_counter()
         lats = []
@@ -765,15 +936,24 @@ class GNNServer:
                                   fields=out[i], latency_s=lat,
                                   bucket=b.n_points,
                                   batch_size=len(fl.ok_reqs)))
+            if tel_on:
+                tracer.record_span("request", req.t_submit or t_done,
+                                   t_done, trace_id=f"req-{req.request_id}",
+                                   bucket=b.n_points)
+        if tel_on:
+            tracer.record_span("harvest", t_sync, t_done,
+                               bucket=b.n_points, batch=len(fl.ok_reqs))
         if record and fl.ok_reqs:
             padding = [self._padding_of(b, req) for req in fl.ok_reqs]
             # partial microbatches replay the last request to fill max_batch
             # rows (_dispatch): that compute is discarded, so it is waste too
             replay_rows = max(self.max_batch, len(fl.ok_reqs)) - \
                 len(fl.ok_reqs)
+            for lat in lats:
+                self.stats.record_latency(lat)
+            self.stats.record_batch(len(fl.ok_reqs))
+            self.stats.record_stage("harvest", t_done - t_sync)
             with self.stats.lock:
-                self.stats.latencies_s.extend(lats)
-                self.stats.batch_sizes.append(len(fl.ok_reqs))
                 self.stats.requested_points += sum(a for a, _ in padding)
                 self.stats.padding_points += sum(w for _, w in padding) + \
                     replay_rows * b.n_points
@@ -811,6 +991,16 @@ class GNNServer:
                     break
                 plan.append((n, [q.popleft()
                                  for _ in range(min(len(q), width))]))
+        # queue wait ends when the request is popped into a work plan
+        t_pop = time.perf_counter()
+        tracer = self.telemetry.tracer
+        for n, batch in plan:
+            for req in batch:
+                wait = t_pop - req.t_submit
+                self.stats.record_stage("queue_wait", wait)
+                tracer.record_span("queue_wait", req.t_submit, t_pop,
+                                   trace_id=f"req-{req.request_id}",
+                                   bucket=n)
         return plan
 
     def _item_error(self, n_points: int, batch: List[Request],
@@ -849,6 +1039,12 @@ class GNNServer:
 
     def _run_plan_inner(self, plan, async_mode: bool,
                         errors_as_results: bool) -> List[Result]:
+        with self.telemetry.span("flush", items=len(plan),
+                                 mode="async" if async_mode else "sync"):
+            return self._run_plan_body(plan, async_mode, errors_as_results)
+
+    def _run_plan_body(self, plan, async_mode: bool,
+                       errors_as_results: bool) -> List[Result]:
         results: List[Result] = []
         t0 = time.perf_counter()
         if not async_mode:
@@ -948,7 +1144,8 @@ class GNNServer:
         self._deadline_s = float(deadline_s)
         self._done_cap = max(int(result_cap), 1)
         self._stop_flag = False
-        self._worker = threading.Thread(target=self._serve_loop, daemon=True)
+        self._worker = threading.Thread(target=self._serve_loop, daemon=True,
+                                        name="gnn-serve-worker")
         self._worker.start()
 
     def stop(self):
@@ -964,7 +1161,8 @@ class GNNServer:
     def result(self, request_id: int, timeout: Optional[float] = None
                ) -> Result:
         """Block until the background worker finishes ``request_id``."""
-        deadline = None if timeout is None else time.perf_counter() + timeout
+        t0 = time.perf_counter()
+        deadline = None if timeout is None else t0 + timeout
         with self._cond:
             self._waiting.add(request_id)     # shield from buffer eviction
             try:
@@ -975,9 +1173,14 @@ class GNNServer:
                         raise TimeoutError(f"request {request_id} not done "
                                            f"within {timeout}s")
                     self._cond.wait(timeout=rem)
-                return self._done.pop(request_id)
+                out = self._done.pop(request_id)
             finally:
                 self._waiting.discard(request_id)
+        if self.telemetry.enabled:
+            self.telemetry.tracer.record_span(
+                "result", t0, time.perf_counter(),
+                trace_id=f"req-{request_id}")
+        return out
 
     def _serve_loop(self):
         while True:
@@ -1048,11 +1251,23 @@ def main():
                     help="split each request across this many devices "
                     "(requires that many jax devices, e.g. via "
                     "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="enable the span tracer + profiler annotations")
+    ap.add_argument("--trace-dir", default=None,
+                    help="export trace.jsonl / trace_chrome.json / "
+                    "metrics.prom / metrics.json here on exit "
+                    "(implies --telemetry)")
+    ap.add_argument("--profile", action="store_true",
+                    help="additionally capture a full jax.profiler trace "
+                    "under <trace-dir>/jax_profile")
     args = ap.parse_args()
 
     cfg = GNNConfig()
     if args.reduced:
         cfg = cfg.reduced()
+    if args.telemetry or args.trace_dir:
+        cfg = cfg.replace(telemetry=True, trace_dir=args.trace_dir or "",
+                          profile_capture=args.profile)
     if args.max_live_buckets is not None:
         cfg = cfg.replace(max_live_buckets=args.max_live_buckets)
     if args.bucket_granularity is not None:
@@ -1085,11 +1300,20 @@ def main():
     for i in range(args.requests):
         verts, faces = geo.car_surface(geo.sample_params(i))
         reqs.append((verts, faces, int(rng.choice(req_sizes))))
-    results = server.serve(reqs)
+    with server.telemetry.capture():
+        results = server.serve(reqs)
     rep = server.stats.report()
     print(f"served {rep['requests']} requests | p50 {rep['p50_ms']:.1f} ms | "
           f"p95 {rep['p95_ms']:.1f} ms | mean batch {rep['mean_batch']:.1f} | "
           f"{rep['throughput_rps']:.1f} req/s")
+    for stage, s in rep["stages"].items():
+        print(f"  stage {stage:<12} n={s['count']:<4} "
+              f"mean {s['mean_ms']:.2f} ms  p95 {s['p95_ms']:.2f} ms  "
+              f"total {s['total_s']:.3f} s")
+    if args.trace_dir:
+        paths = server.telemetry.export()
+        print("telemetry artifacts: " +
+              ", ".join(sorted(paths.values())))
     if auto:
         print(f"auto ladder {list(server.ladder())} | "
               f"hits {rep['bucket_hits']} misses {rep['bucket_misses']} "

@@ -43,6 +43,20 @@ from repro.launch.sharding import mesh_for_shards, shard_count_for, shard_put
 from repro.models import meshgraphnet as mgn
 from repro.models import registry
 from repro.optim.adam import AdamConfig, adam_init, adam_update
+from repro.telemetry import Telemetry, default_latency_buckets
+
+# training-loop stages whose wall time lands in the metrics registry as
+# ``train_stage_<name>_seconds`` histograms (benchmarks/bench_train.py
+# reports them as the per-stage breakdown)
+TRAIN_STAGES = ("data", "partition", "prepare", "step", "eval", "checkpoint")
+
+
+def _stage_hists(tel: Telemetry) -> dict:
+    return {s: tel.metrics.histogram(
+        f"train_stage_{s}_seconds",
+        help=f"wall seconds spent in the '{s}' training stage",
+        buckets=default_latency_buckets())
+        for s in TRAIN_STAGES}
 
 
 def make_gnn_step_fn(cfg: GNNConfig, opt_cfg: AdamConfig, mesh=None,
@@ -108,21 +122,43 @@ def train_gnn(cfg: GNNConfig, steps: int, n_samples: int,
               ckpt_path: str | None = None, log_every: int = 10,
               agg_impl: str | None = None,
               graph_source: str | None = None,
-              shard_devices: Optional[int] = None):
+              shard_devices: Optional[int] = None,
+              telemetry: Optional[Telemetry] = None):
     """Train X-MeshGraphNet on partitioned synthetic DrivAerML-proxy data.
 
     ``shard_devices`` caps the partition-parallel width (``None`` = use as
     many visible devices as divide ``cfg.n_partitions``; ``1`` forces the
     single-device scan path). ``graph_source`` overrides
     ``cfg.graph_source`` for the training-graph build.
+
+    ``telemetry`` (or the config's ``telemetry``/``trace_dir`` knobs)
+    records the loop's stage timings: every stage lands in the metrics
+    registry as a ``train_stage_<name>_seconds`` histogram regardless of
+    the enabled flag, and additionally as tracer spans (``data``,
+    ``partition``, ``step`` with ``trace_id="step-<it>"``, nested
+    ``prepare``, ``checkpoint``) when the span tracer is on.
     """
     if agg_impl is not None:
         cfg = cfg.replace(agg_impl=agg_impl)
     if graph_source is not None:
         cfg = cfg.replace(graph_source=graph_source)
-    train, test, norm_in, norm_out = pipe.build_dataset(cfg, n_samples)
+    tel = telemetry if telemetry is not None else Telemetry.from_config(cfg)
+    hists = _stage_hists(tel)
+    loss_gauge = tel.metrics.gauge("train_loss",
+                                   help="most recent training loss")
+    steps_ctr = tel.metrics.counter("train_steps_total",
+                                    help="optimizer steps taken")
+    with tel.span("data", n_samples=n_samples), \
+            tel.annotate("train/build_dataset"):
+        t0 = time.perf_counter()
+        train, test, norm_in, norm_out = pipe.build_dataset(cfg, n_samples)
+        hists["data"].observe(time.perf_counter() - t0)
     # one partitioning pass per sample + common padding so one jit covers all
-    psamples = pipe.partition_samples(cfg, train, norm_in, norm_out)
+    with tel.span("partition", n_samples=len(train)), \
+            tel.annotate("train/partition"):
+        t0 = time.perf_counter()
+        psamples = pipe.partition_samples(cfg, train, norm_in, norm_out)
+        hists["partition"].observe(time.perf_counter() - t0)
 
     params = mgn.init(jax.random.PRNGKey(0), cfg)
     opt_cfg = AdamConfig(total_steps=steps)
@@ -144,9 +180,20 @@ def train_gnn(cfg: GNNConfig, steps: int, n_samples: int,
         # is GBs, so keeping every sample device-resident would defeat the
         # single-accelerator mode
         t0 = time.time()
-        stacked, denom = prepare_gnn_batch(psamples[it % len(psamples)], mesh)
-        params, opt, loss, gnorm = step_fn(params, opt, stacked, denom)
-        losses.append(float(loss))         # blocks until the step finishes
+        with tel.span("step", trace_id=f"step-{it}", it=it):
+            tp0 = time.perf_counter()
+            with tel.span("prepare"):
+                stacked, denom = prepare_gnn_batch(
+                    psamples[it % len(psamples)], mesh)
+            tp1 = time.perf_counter()
+            with tel.annotate(f"train/step{'_first' if it == 0 else ''}"):
+                params, opt, loss, gnorm = step_fn(params, opt, stacked,
+                                                   denom)
+                losses.append(float(loss))  # blocks until the step finishes
+        hists["prepare"].observe(tp1 - tp0)
+        hists["step"].observe(time.perf_counter() - tp1)
+        loss_gauge.set(float(loss))
+        steps_ctr.inc()
         dt = time.time() - t0
         if it == 0:
             t_first = dt                   # compile + first execution
@@ -161,8 +208,11 @@ def train_gnn(cfg: GNNConfig, steps: int, n_samples: int,
             print(f"step {it:5d} loss {float(loss):.5f} "
                   f"gnorm {float(gnorm):.3f} ({timing})", flush=True)
     if ckpt_path:
-        ckpt.save(ckpt_path, {"params": params, "norm_in": vars(norm_in),
-                              "norm_out": vars(norm_out)})
+        with tel.span("checkpoint", path=ckpt_path):
+            t0 = time.perf_counter()
+            ckpt.save(ckpt_path, {"params": params, "norm_in": vars(norm_in),
+                                  "norm_out": vars(norm_out)})
+            hists["checkpoint"].observe(time.perf_counter() - t0)
     return params, losses, (train, test, norm_in, norm_out)
 
 
@@ -277,17 +327,41 @@ def main():
     ap.add_argument("--shard-devices", type=int, default=None,
                     help="cap partition-parallel width (1 = force the "
                     "single-device scan path)")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="enable the span tracer + profiler annotations")
+    ap.add_argument("--trace-dir", default=None,
+                    help="export trace.jsonl / trace_chrome.json / "
+                    "metrics.prom / metrics.json here on exit "
+                    "(implies --telemetry)")
+    ap.add_argument("--profile", action="store_true",
+                    help="additionally capture a full jax.profiler trace "
+                    "under <trace-dir>/jax_profile")
     args = ap.parse_args()
     if args.arch == "xmgn-drivaer":
         cfg = get_config(args.arch)
         if args.reduced:
             cfg = cfg.reduced()
-        params, losses, (train, test, ni, no) = train_gnn(
-            cfg, args.steps, args.samples, args.ckpt,
-            graph_source=args.graph_source,
-            shard_devices=args.shard_devices)
-        metrics = eval_gnn(cfg, params, test, ni, no)
+        if args.telemetry or args.trace_dir:
+            cfg = cfg.replace(telemetry=True, trace_dir=args.trace_dir or "",
+                              profile_capture=args.profile)
+        tel = Telemetry.from_config(cfg)
+        with tel.capture():
+            params, losses, (train, test, ni, no) = train_gnn(
+                cfg, args.steps, args.samples, args.ckpt,
+                graph_source=args.graph_source,
+                shard_devices=args.shard_devices, telemetry=tel)
+            with tel.span("eval", n_samples=len(test)):
+                t0 = time.perf_counter()
+                metrics = eval_gnn(cfg, params, test, ni, no)
+                tel.metrics.histogram(
+                    "train_stage_eval_seconds",
+                    help="wall seconds spent in the 'eval' training stage",
+                ).observe(time.perf_counter() - t0)
         print(json.dumps(metrics, indent=2))
+        if args.trace_dir:
+            paths = tel.export()
+            print("telemetry artifacts: " +
+                  ", ".join(sorted(paths.values())))
     else:
         _, losses = train_llm(args.arch, args.reduced, args.steps)
         print(f"final loss {losses[-1]:.4f} (from {losses[0]:.4f})")

@@ -115,20 +115,24 @@ def apply(params, cfg: GNNConfig, node_feats, edge_feats, senders, receivers,
         agg_receivers = jnp.where(edge_mask.astype(bool), receivers, spread)
     aggregate = make_aggregator(agg_receivers, n_nodes, impl,
                                 interpret=interpret)
-    h = nn.mlp(params["node_encoder"], node_feats, act)
-    e = nn.mlp(params["edge_encoder"], edge_feats, act)
-    if edge_mask is not None:
-        e = e * edge_mask[:, None]
+    # named scopes label the HLO ops by model stage in jax.profiler captures
+    with jax.named_scope("mgn/encode"):
+        h = nn.mlp(params["node_encoder"], node_feats, act)
+        e = nn.mlp(params["edge_encoder"], edge_feats, act)
+        if edge_mask is not None:
+            e = e * edge_mask[:, None]
 
     def mp_layer(carry, layer_params):
         h, e = carry
         pe, pn = layer_params
-        msg_in = jnp.concatenate([h[senders], h[receivers], e], axis=-1)
-        e_new = e + nn.mlp(pe, msg_in, act)
-        if edge_mask is not None:
-            e_new = e_new * edge_mask[:, None]
-        agg = aggregate(e_new)
-        h_new = h + nn.mlp(pn, jnp.concatenate([h, agg], axis=-1), act)
+        with jax.named_scope("mgn/message_passing"):
+            msg_in = jnp.concatenate([h[senders], h[receivers], e], axis=-1)
+            e_new = e + nn.mlp(pe, msg_in, act)
+            if edge_mask is not None:
+                e_new = e_new * edge_mask[:, None]
+            with jax.named_scope("mgn/aggregate"):
+                agg = aggregate(e_new)
+            h_new = h + nn.mlp(pn, jnp.concatenate([h, agg], axis=-1), act)
         return (h_new, e_new), None
 
     if getattr(cfg, "remat", True):
@@ -137,7 +141,8 @@ def apply(params, cfg: GNNConfig, node_feats, edge_feats, senders, receivers,
         mp_layer = jax.checkpoint(
             mp_layer, policy=jax.checkpoint_policies.nothing_saveable)
     (h, e), _ = jax.lax.scan(mp_layer, (h, e), (params["proc_edge"], params["proc_node"]))
-    return nn.mlp(params["decoder"], h, act)
+    with jax.named_scope("mgn/decode"):
+        return nn.mlp(params["decoder"], h, act)
 
 
 def masked_mse(pred, target, mask, denom=None):
