@@ -1,7 +1,8 @@
 PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: verify test bench-graph bench-serve bench-train smoke trace
+.PHONY: verify test bench-graph bench-serve bench-train bench-coldstart \
+	smoke trace
 
 # tier-1 gate: full test suite + graph-build perf smoke
 verify: test bench-graph
@@ -15,6 +16,13 @@ bench-graph:
 # serving hot path: async-vs-sync flush + aggregation impl comparison
 bench-serve:
 	cd benchmarks && PYTHONPATH=../src $(PY) bench_serve.py --smoke
+
+# restart latency: fresh vs warm persistent compile cache vs deploy
+# artifact; asserts the artifact restore is >=3x faster and compiles
+# nothing (see README "Cold start & deploy artifacts")
+bench-coldstart:
+	cd benchmarks && PYTHONPATH=../src $(PY) bench_serve.py --smoke \
+		--compile-cache /tmp/xmgn-xla-cache --json /tmp/bench_serve.json
 
 # training step: single-device scan vs shard_map partition-parallel
 bench-train:

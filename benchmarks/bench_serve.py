@@ -17,10 +17,20 @@ Measures the two serving-performance levers this repo ships:
           nonstationary request-size traffic (small-resolution phase, then
           a shift to large requests) through a peak-provisioned static
           ladder vs the traffic-derived auto ladder (``bucket_sizes=
-          "auto"``): padding waste and p50/p95 latency for the cold
-          (adaptation, on-demand compiles) and warm passes, plus the
-          compiled-program cache counters. Asserts auto is no worse than
-          static on padding waste.
+          "auto"``): padding waste and p50/p95/p99 latency for the cold
+          (adaptation, on-demand compiles — the p99 during ladder growth)
+          and warm passes, plus the compiled-program cache counters.
+          Asserts auto is no worse than static on padding waste.
+  coldstart
+          process-restart latency (``time_to_first_result_s`` = server
+          construction/restore + first served request, measured in a fresh
+          subprocess after imports) three ways: a truly fresh server
+          (compiles everything), a fresh server with a WARM persistent
+          compilation cache (re-traces, loads executables from disk), and
+          a server restored from a deploy artifact
+          (``GNNServer.from_artifact``: zero compiles, zero
+          recalibration). Asserts the artifact restore is >= 3x faster
+          than the fresh cold start and compiles nothing.
 
 Requests use a densely tessellated geometry (``--nu/--nv``; default ~260k
 triangles, the realistic STL regime) so host surface sampling is a real
@@ -39,6 +49,10 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
+import subprocess
+import sys
+import tempfile
 import time
 
 import jax
@@ -187,12 +201,14 @@ def bench_autoscale(cfg, reference, max_batch, smoke, rows, report):
         waste[name] = warm["padding_waste_frac"]
         report["autoscale"][name] = {
             "ladder": list(server.ladder()),
+            # cold pass p99 IS the p99-during-ladder-growth: the tail
+            # request pays the on-demand calibrate+compile
             "cold": {k: cold[k] for k in
-                     ("p50_ms", "p95_ms", "throughput_rps",
+                     ("p50_ms", "p95_ms", "p99_ms", "throughput_rps",
                       "padding_waste_frac", "bucket_compiles",
-                      "grown_buckets")},
+                      "cache_loads", "grown_buckets")},
             "warm": {k: warm[k] for k in
-                     ("p50_ms", "p95_ms", "throughput_rps",
+                     ("p50_ms", "p95_ms", "p99_ms", "throughput_rps",
                       "padding_waste_frac", "bucket_hits", "bucket_misses",
                       "bucket_evictions", "bucket_compiles")},
         }
@@ -207,6 +223,122 @@ def bench_autoscale(cfg, reference, max_batch, smoke, rows, report):
     assert waste["auto"] <= waste["static"] + 1e-9, waste
     rows.append(("autoscale_waste_ratio", 0.0,
                  f"auto={waste['auto']:.1%} vs static={waste['static']:.1%}"))
+
+
+def _coldstart_child(args):
+    """Measure time-to-first-result in THIS fresh process (post-import).
+
+    Modes: ``fresh`` builds a server from scratch (optionally against a
+    persistent compile-cache dir), ``artifact`` restores
+    ``GNNServer.from_artifact``. Emits one ``COLDSTART_JSON {...}`` line
+    the parent parses.
+    """
+    verts, faces = geo.car_surface(geo.sample_params(0), nu=args.nu,
+                                   nv=args.nv)
+    bucket = args.bucket
+    t0 = time.perf_counter()
+    if args.coldstart_child == "artifact":
+        server = GNNServer.from_artifact(args.artifact_path)
+    else:
+        cfg = GNNConfig().reduced()
+        if args.compile_cache:
+            cfg = cfg.replace(compile_cache_dir=args.compile_cache)
+        server = GNNServer(cfg, (bucket,), max_batch=args.max_batch,
+                           reference=(verts, faces), check_requests=False)
+    [res] = server.serve([(verts, faces, bucket)])
+    t_first = time.perf_counter() - t0
+    assert res.error is None and np.isfinite(res.fields).all()
+    warm = []
+    for _ in range(3):
+        t1 = time.perf_counter()
+        server.serve([(verts, faces, bucket)])
+        warm.append(time.perf_counter() - t1)
+    rep = server.stats.report()
+    print("COLDSTART_JSON " + json.dumps({
+        "mode": args.coldstart_child,
+        "time_to_first_result_s": t_first,
+        "warm_p50_s": float(np.median(warm)),
+        "bucket_compiles": rep["bucket_compiles"],
+        "cache_loads": rep["cache_loads"],
+        "bucket_calibrations": rep["bucket_calibrations"],
+    }))
+
+
+def bench_coldstart(cfg, bucket, max_batch, nu, nv, compile_cache_dir, rows,
+                    report):
+    """Restart latency: fresh vs warm-compile-cache vs deploy artifact.
+
+    The parent builds the deployment (one server, one served request,
+    persistent cache populated, artifact saved), then each restart flavor
+    runs in its own subprocess so jit caches, tracing and backend state
+    are genuinely cold. ``time_to_first_result_s`` is construction/restore
+    + first request, excluding interpreter/import startup (identical
+    across flavors).
+    """
+    tmp = tempfile.mkdtemp(prefix="bench-coldstart-")
+    cache = compile_cache_dir or os.path.join(tmp, "xla-cache")
+    art = os.path.join(tmp, "deploy.msgpack")
+    verts, faces = geo.car_surface(geo.sample_params(0), nu=nu, nv=nv)
+
+    pcfg = cfg.replace(compile_cache_dir=cache)
+    t0 = time.perf_counter()
+    server = GNNServer(pcfg, (bucket,), max_batch=max_batch,
+                       reference=(verts, faces), check_requests=False)
+    server.serve([(verts, faces, bucket)])
+    parent_first_s = time.perf_counter() - t0
+    prep = server.stats.report()
+    server.save_artifact(art)
+
+    def child(mode, cache_dir=None):
+        cmd = [sys.executable, os.path.abspath(__file__),
+               "--coldstart-child", mode, "--bucket", str(bucket),
+               "--max-batch", str(max_batch), "--nu", str(nu),
+               "--nv", str(nv), "--artifact-path", art]
+        if cache_dir:
+            cmd += ["--compile-cache", cache_dir]
+        proc = subprocess.run(cmd, capture_output=True, text=True,
+                              timeout=900)
+        assert proc.returncode == 0, \
+            f"coldstart child {mode} failed:\n{proc.stdout}\n{proc.stderr}"
+        line = [ln for ln in proc.stdout.splitlines()
+                if ln.startswith("COLDSTART_JSON ")][-1]
+        return json.loads(line.split(" ", 1)[1])
+
+    fresh = child("fresh", cache_dir=os.path.join(tmp, "empty-cache"))
+    warmcache = child("fresh", cache_dir=cache)
+    artifact = child("artifact")
+
+    # contract: a compile-cache restart compiles nothing (disk loads); an
+    # artifact restore additionally skips tracing and recalibration
+    assert fresh["bucket_compiles"] >= 1, fresh
+    assert warmcache["bucket_compiles"] == 0, warmcache
+    assert warmcache["cache_loads"] >= 1, warmcache
+    assert artifact["bucket_compiles"] == 0, artifact
+    assert artifact["bucket_calibrations"] == 0, artifact
+    speedup = fresh["time_to_first_result_s"] / \
+        max(artifact["time_to_first_result_s"], 1e-9)
+    assert speedup >= 3.0, (
+        f"artifact restore only {speedup:.2f}x faster than fresh cold "
+        f"start (fresh {fresh['time_to_first_result_s']:.2f}s, artifact "
+        f"{artifact['time_to_first_result_s']:.2f}s)")
+
+    report["coldstart"] = {
+        "parent": {"time_to_first_result_s": parent_first_s,
+                   "bucket_compiles": prep["bucket_compiles"],
+                   "cache_loads": prep["cache_loads"]},
+        "fresh": fresh, "warm_compile_cache": warmcache,
+        "artifact": artifact,
+        "artifact_speedup_vs_fresh": speedup,
+        "compile_cache_dir": cache, "artifact_path": art,
+    }
+    for name, r in (("fresh", fresh), ("warmcache", warmcache),
+                    ("artifact", artifact)):
+        rows.append((f"coldstart_{name}_first_result",
+                     r["time_to_first_result_s"] * 1e6,
+                     f"compiles={r['bucket_compiles']} "
+                     f"cache_loads={r['cache_loads']}"))
+    rows.append(("coldstart_artifact_speedup", 0.0,
+                 f"{speedup:.2f}x over fresh"))
 
 
 def main():
@@ -225,7 +357,22 @@ def main():
                     help="steady-state repetitions (best kept)")
     ap.add_argument("--skip-pallas", action="store_true",
                     help="skip the interpret-mode pallas aggregation run")
+    ap.add_argument("--compile-cache", default=None,
+                    help="persistent XLA compile-cache dir for the "
+                         "coldstart scenario (default: a fresh tmpdir)")
+    ap.add_argument("--coldstart-child", default=None,
+                    choices=("fresh", "artifact"),
+                    help="internal: run as a coldstart measurement child")
+    ap.add_argument("--artifact-path", default=None,
+                    help="internal: deploy artifact for --coldstart-child")
     args = ap.parse_args()
+
+    if args.coldstart_child:
+        args.bucket = args.bucket or 256
+        args.nu = args.nu or 128
+        args.nv = args.nv or 64
+        _coldstart_child(args)
+        return
 
     bucket = args.bucket or (256 if args.smoke else 512)
     n_req = args.requests or (6 if args.smoke else 16)
@@ -254,6 +401,8 @@ def main():
                     rows, report)
     bench_autoscale(cfg, reference, args.max_batch, args.smoke, rows,
                     report)
+    bench_coldstart(cfg, bucket, args.max_batch, nu, nv, args.compile_cache,
+                    rows, report)
     if args.smoke:
         # CI contract: the JSON record carries the per-stage breakdown
         for key in ("sync", "async"):

@@ -180,6 +180,14 @@ class GNNConfig:
     telemetry: bool = False
     trace_dir: str = ""
     profile_capture: bool = False
+    # cold start (repro.ckpt.compile_cache / artifact): when set, JAX's
+    # persistent compilation cache lives here — recompiles of previously
+    # seen bucket/train programs are disk loads, not XLA compiles, across
+    # process restarts, autoscaler ladder growth and LRU evict→rebuild.
+    # CLI: --compile-cache on serve_gnn and train. Deploy artifacts
+    # (GNNServer.save_artifact / from_artifact) go further and bundle
+    # AOT-serialized executables so a restored server pays zero compiles.
+    compile_cache_dir: str = ""
     remat: bool = True             # activation checkpointing (paper SV-D)
     dtype: str = "float32"
     source: str = "arXiv X-MeshGraphNet (NVIDIA 2024)"

@@ -72,15 +72,36 @@ Sampling is deterministic per (server seed, request id): resubmitting a
 request id reproduces its point cloud bit-for-bit regardless of what other
 traffic (or warmup) ran before it.
 
+Cold start (``repro.ckpt.compile_cache`` / ``repro.ckpt.artifact``): with
+``cfg.compile_cache_dir`` / ``--compile-cache`` set, XLA compiles go through
+a persistent on-disk cache, so process restarts, autoscaler ladder growth
+and LRU evict→rebuild re-pay a millisecond disk load instead of the
+~0.5–2 s compile. Bucket calibration (the one host cKDTree use) is cached
+per size in ``_calib`` and survives eviction, so an evict→rebuild re-pays
+at most a cache load — never recalibration. ``save_artifact``/
+``from_artifact`` go further: the deploy artifact bundles params,
+normalizers, the learned ladder + request-size histogram, every calibrated
+grid spec and (where the backend supports it) AOT-serialized executables,
+so a restored server serves its first request with ZERO XLA compiles.
+``ServerStats`` splits ``bucket_compiles`` (true compiles) from
+``cache_loads`` (programs obtained from the persistent cache or a
+deserialized artifact executable).
+
 Usage:
   PYTHONPATH=src python -m repro.launch.serve_gnn --requests 8 \
       --buckets 512,1024 --reduced [--shard-devices 8] [--ckpt ckpt.msgpack]
   PYTHONPATH=src python -m repro.launch.serve_gnn --requests 8 \
       --buckets auto --reduced        # traffic-derived autoscaling ladder
+  PYTHONPATH=src python -m repro.launch.serve_gnn --requests 8 \
+      --buckets auto --reduced --compile-cache /var/cache/xmgn \
+      --save-artifact deploy.msgpack  # pre-bake the adapted ladder
+  PYTHONPATH=src python -m repro.launch.serve_gnn --requests 8 \
+      --artifact deploy.msgpack       # restart at warm-path latency
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import logging
 import threading
 import time
@@ -93,6 +114,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.ckpt import artifact as artifact_lib
+from repro.ckpt import compile_cache
 from repro.configs.base import GNNConfig
 from repro.core.graph_build import sample_surface
 from repro.data import geometry as geo
@@ -110,7 +133,7 @@ log = logging.getLogger(__name__)
 # stage histograms + the per-request trace spans): submit -> queue_wait ->
 # bucket_route -> prepare -> dispatch -> device_wait -> harvest -> result
 SERVE_STAGES = ("queue_wait", "prepare", "dispatch", "device_wait",
-                "harvest", "compile")
+                "harvest", "compile", "cache_load")
 
 
 def _level_sizes(n_points: int, n_levels: int) -> Tuple[int, ...]:
@@ -149,7 +172,10 @@ class Bucket:
     n_points: int
     ms: MultiscaleSpec
     infer: object                      # jitted batched fn (unsharded mode)
-    compiles: int = 0                  # ACTUAL XLA compiles (jit cache growth)
+    compiles: int = 0                  # ACTUAL XLA compiles (backend built it)
+    cache_loads: int = 0               # programs loaded, not compiled (disk
+                                       # compilation cache / AOT artifact)
+    aot: bool = False                  # infer is a deserialized executable
     served: int = 0
     last_used: int = 0                 # LRU tick (autoscaler eviction order)
     sspec: Optional[sharded.ShardSpec] = None   # sharded mode only
@@ -202,6 +228,10 @@ class ServerStats:
     bucket_misses: int = 0             # bucket had to be (re)built
     bucket_evictions: int = 0          # cold compiled programs dropped (LRU)
     bucket_compiles: int = 0           # actual XLA compiles across buckets
+    cache_loads: int = 0               # programs obtained WITHOUT compiling:
+                                       # persistent-compile-cache disk hits +
+                                       # deserialized artifact executables
+    bucket_calibrations: int = 0       # host cKDTree grid calibrations run
     grown_buckets: int = 0             # ladder sizes added for oversize asks
     padding_points: int = 0            # computed-but-unrequested points
     requested_points: int = 0          # points actually asked for
@@ -271,6 +301,8 @@ class ServerStats:
             self.bucket_misses = 0
             self.bucket_evictions = 0
             self.bucket_compiles = 0
+            self.cache_loads = 0
+            self.bucket_calibrations = 0
             self.grown_buckets = 0
             self.padding_points = 0
             self.requested_points = 0
@@ -305,6 +337,8 @@ class ServerStats:
                 "bucket_misses": self.bucket_misses,
                 "bucket_evictions": self.bucket_evictions,
                 "bucket_compiles": self.bucket_compiles,
+                "cache_loads": self.cache_loads,
+                "bucket_calibrations": self.bucket_calibrations,
                 "grown_buckets": self.grown_buckets,
             }
             padded = self.padding_points
@@ -315,6 +349,7 @@ class ServerStats:
             "requests": n,
             "p50_ms": self._h_latency.percentile(50) * 1e3 if n else 0.0,
             "p95_ms": self._h_latency.percentile(95) * 1e3 if n else 0.0,
+            "p99_ms": self._h_latency.percentile(99) * 1e3 if n else 0.0,
             "mean_batch": self._h_batch.mean,
             "throughput_rps": n / max(t_serving, 1e-9),
             "padding_waste_frac": padded / max(padded + requested, 1),
@@ -366,7 +401,11 @@ class GNNServer:
                  reference=None, check_requests: bool = True,
                  reject_overflow: bool = False, shard_devices: int = 1,
                  shard_pad_factor: float = 1.3, async_flush: bool = True,
-                 donate: bool = True, telemetry: Optional[Telemetry] = None):
+                 donate: bool = True, telemetry: Optional[Telemetry] = None,
+                 _restore: Optional[dict] = None):
+        # persistent XLA compile cache: recompiles of previously-seen bucket
+        # programs (restart, ladder growth, LRU evict→rebuild) hit disk
+        compile_cache.enable(getattr(cfg, "compile_cache_dir", ""))
         if agg_impl is not None:
             cfg = cfg.replace(agg_impl=agg_impl)
         if cfg.agg_impl == "pallas" and int(shard_devices) == 1:
@@ -414,6 +453,14 @@ class GNNServer:
         self._queues: Dict[int, deque] = {}
         self._buckets: Dict[int, Bucket] = {}
         self._ladder: set = set(seed_sizes)   # target sizes (incl. not-live)
+        # calibration cache: one MultiscaleSpec per size, kept across LRU
+        # evictions and seedable from a deploy artifact — an evict→rebuild
+        # re-pays at most a compile-cache load, never host recalibration
+        self._calib: Dict[int, MultiscaleSpec] = {}
+        # AOT executables deserialized from a deploy artifact, consumed by
+        # _build_bucket so the bucket's first dispatch runs a pre-compiled
+        # program (zero traces, zero XLA compiles)
+        self._aot: Dict[int, object] = {}
         self._size_hist: deque = deque(maxlen=max(int(cfg.bucket_hist_len),
                                                   1))
         self._refit_count = 0
@@ -441,29 +488,66 @@ class GNNServer:
         ref_verts, ref_faces = reference if reference is not None else \
             geo.car_surface(geo.sample_params(0))
         self._reference = (ref_verts, ref_faces)
+        if _restore:
+            # deploy-artifact state (from_artifact): learned ladder +
+            # request-size histogram, calibrated specs, AOT executables
+            self._calib.update(_restore.get("calib", {}))
+            self._aot.update(_restore.get("aot", {}))
+            self._ladder |= set(_restore.get("ladder", ()))
+            for s in _restore.get("size_hist", ()):
+                self._size_hist.append(int(s))
         for n in seed_sizes:
             self._buckets[n] = self._build_bucket(n)
             self._queues[n] = deque()
 
-    def _build_bucket(self, n: int) -> Bucket:
-        """Calibrate + wire one padding bucket.
-
-        One-time host calibration on a reference cloud — the only cKDTree
-        use in the server, never in the request path. The XLA compile
-        itself happens lazily on the bucket's first dispatch and is counted
-        in ``Bucket.compiles`` / ``ServerStats.bucket_compiles``.
-        """
-        cfg = self.cfg
+    def _sample_reference(self, n: int):
+        """Deterministic n-point sample of the calibration reference."""
         ref_verts, ref_faces = self._reference
+        return sample_surface(ref_verts, ref_faces, n,
+                              np.random.default_rng(0))
+
+    def _calibrate(self, n: int) -> MultiscaleSpec:
+        """Grid calibration for one bucket size, cached per size.
+
+        The cache entry outlives the bucket: an LRU-evicted bucket that
+        becomes hot again — or a server restored from a deploy artifact
+        (which ships every spec) — reuses the spec instead of re-paying the
+        host cKDTree calibration. ``stats.bucket_calibrations`` counts the
+        actual calibrations run, so tests can pin "evict→rebuild never
+        recalibrates".
+        """
+        ms = self._calib.get(n)
+        if ms is not None:
+            return ms
+        cfg = self.cfg
         levels = _level_sizes(n, self.n_levels)
-        ref_pts, ref_nrm = sample_surface(ref_verts, ref_faces, n,
-                                          np.random.default_rng(0))
+        ref_pts, _ = self._sample_reference(n)
         grids = tuple(hashgrid.calibrate_spec(ref_pts[:m], cfg.k_neighbors,
                                               n_points=m)
                       for m in levels)
         ms = MultiscaleSpec(level_sizes=levels, k=cfg.k_neighbors,
                             grids=grids)
+        self._calib[n] = ms
+        with self.stats.lock:
+            self.stats.bucket_calibrations += 1
+        return ms
+
+    def _build_bucket(self, n: int) -> Bucket:
+        """Calibrate + wire one padding bucket.
+
+        Calibration goes through the per-size ``_calibrate`` cache (the
+        only cKDTree use in the server, never in the request path, never
+        re-paid on evict→rebuild). The XLA compile itself happens lazily on
+        the bucket's first dispatch and is counted in ``Bucket.compiles``
+        / ``ServerStats.bucket_compiles`` — unless the program comes from
+        a deploy artifact's AOT executable or the persistent compilation
+        cache, which count as ``cache_loads`` instead.
+        """
+        cfg = self.cfg
+        ms = self._calibrate(n)
         if self.shard_devices > 1:
+            ref_pts, ref_nrm = self._sample_reference(n)
+            levels = ms.level_sizes
             # freeze per-shard shapes/grids from the reference plan;
             # per-request planning is then cKDTree-free geometric numpy
             ref_plan = sharded.plan_shards(
@@ -478,6 +562,15 @@ class GNNServer:
                 norm_out=self._norm_out)
             return Bucket(n_points=n, ms=ms, infer=None, sspec=sspec,
                           shard_infer=shard_infer)
+        aot = self._aot.get(n)
+        if aot is not None:
+            # deploy-artifact executable: already compiled, no jit cache —
+            # the whole program was obtained without an XLA compile
+            b = Bucket(n_points=n, ms=ms, infer=aot, aot=True)
+            b.cache_loads += 1
+            with self.stats.lock:
+                self.stats.cache_loads += 1
+            return b
         infer = make_batched_infer_fn(cfg, ms, knn_impl=self._knn_impl,
                                       interpret=self._interpret,
                                       norm_in=self._norm_in,
@@ -495,6 +588,181 @@ class GNNServer:
         params, norm_in, norm_out = load_gnn_checkpoint(path)
         return cls(cfg, bucket_sizes, params=params,
                    norm_in=norm_in, norm_out=norm_out, **kw)
+
+    # ------------------------------------------------------ deploy artifacts
+
+    # server-construction knobs carried inside the artifact so from_artifact
+    # rebuilds an identical server; the AOT-relevant subset is the set of
+    # knobs baked into the compiled programs (overriding one of those at
+    # restore time drops the executables and falls back to jit + the
+    # persistent compilation cache)
+    _ARTIFACT_KNOBS = ("max_batch", "n_levels", "seed", "check_requests",
+                      "reject_overflow", "async_flush")
+    _AOT_KNOBS = ("max_batch", "n_levels")
+
+    def _bucket_arg_specs(self, n: int):
+        """ShapeDtypeStructs of one unsharded bucket's call signature."""
+        p_sds = jax.tree_util.tree_map(
+            lambda a: jax.ShapeDtypeStruct(np.shape(a), np.asarray(a).dtype),
+            self.params)
+        rows = self.max_batch
+        f32, i32 = np.float32, np.int32
+        return (p_sds, jax.ShapeDtypeStruct((rows, n, 3), f32),
+                jax.ShapeDtypeStruct((rows, n, 3), f32),
+                jax.ShapeDtypeStruct((rows,), i32))
+
+    def save_artifact(self, path: str) -> dict:
+        """Freeze this server's learned + compiled state into one file.
+
+        The artifact bundles params + normalizers, the autoscaler's ladder
+        and request-size histogram, every calibrated grid spec, and an
+        AOT-compiled executable per live bucket (where the backend supports
+        serialization) — everything :meth:`from_artifact` needs to serve
+        the first request with zero XLA compiles and zero recalibration.
+        Returns a small summary dict (bucket sizes, aot sizes, path).
+
+        Sharded servers are not supported: their per-shard shapes are
+        frozen from the reference plan at init and the shard_map programs
+        are not AOT-serializable, so there is no cold start to skip beyond
+        the persistent compilation cache (which works unchanged).
+        """
+        if self.shard_devices > 1:
+            raise ValueError("deploy artifacts are unsharded-only; sharded "
+                             "serving already relies on the persistent "
+                             "compilation cache (cfg.compile_cache_dir)")
+        with self._cond:
+            live = sorted(self._buckets)
+            ladder = sorted(set(self._buckets) | self._ladder)
+            size_hist = [int(s) for s in self._size_hist]
+        # calibrate every ladder target (cheap for live sizes: cached), so
+        # the restored server never runs the host cKDTree
+        for n in ladder:
+            self._calibrate(n)
+        aot: Dict[str, bytes] = {}
+        for n in live:
+            b = self._buckets[n]
+            infer = b.infer
+            if b.aot or not hasattr(infer, "lower"):
+                # the bucket itself runs a deserialized executable: rebuild
+                # the jittable fn just for lowering
+                infer = make_batched_infer_fn(
+                    self.cfg, b.ms, knn_impl=self._knn_impl,
+                    interpret=self._interpret, norm_in=self._norm_in,
+                    norm_out=self._norm_out, donate=self._donate)
+            try:
+                # bypass the persistent cache: a cache-loaded executable
+                # serializes a payload that cannot re-link — AOT export
+                # needs a genuinely fresh backend compile
+                with compile_cache.suspended():
+                    compiled = infer.lower(
+                        *self._bucket_arg_specs(n)).compile()
+            except Exception as e:
+                log.warning("AOT lowering failed for bucket %d (%s: %s); "
+                            "artifact will carry specs only for this size",
+                            n, type(e).__name__, e)
+                continue
+            blob = artifact_lib.serialize_compiled(compiled)
+            if blob is not None:
+                aot[str(n)] = blob
+
+        def norm_tree(nm):
+            if nm is None:
+                return None
+            mean, std = nm
+            return {"mean": np.asarray(mean, np.float32),
+                    "std": np.asarray(std, np.float32)}
+
+        ref_verts, ref_faces = self._reference
+        tree = {
+            "params": self.params,
+            "norm_in": norm_tree(self._norm_in),
+            "norm_out": norm_tree(self._norm_out),
+            "cfg": dataclasses.asdict(self.cfg),
+            "knobs": {k: getattr(self, k) for k in self._ARTIFACT_KNOBS},
+            "knn_impl": self._knn_impl,
+            "interpret": bool(self._interpret),
+            "donate": bool(self._donate),
+            "auto": bool(self.auto),
+            "reference": {"verts": np.asarray(ref_verts, np.float32),
+                          "faces": np.asarray(ref_faces)},
+            "ladder": [int(n) for n in ladder],
+            "live": [int(n) for n in live],
+            "size_hist": size_hist,
+            "calib": {str(n): artifact_lib.pack_multiscale_spec(ms)
+                      for n, ms in self._calib.items()},
+            "aot": aot,
+        }
+        artifact_lib.save_artifact(path, tree)
+        return {"path": path, "buckets": live, "ladder": ladder,
+                "aot_buckets": sorted(int(k) for k in aot)}
+
+    @classmethod
+    def from_artifact(cls, path: str, cfg: Optional[GNNConfig] = None, **kw):
+        """Restore a server from a deploy artifact at warm-path latency.
+
+        Rebuilds the saved server — params, normalizers, adapted ladder,
+        request-size histogram, calibrated grid specs — and seeds each live
+        bucket with its deserialized AOT executable, so the first request
+        triggers zero traces, zero XLA compiles and zero recalibration.
+        Keyword overrides are honored, but overriding a knob that is baked
+        into the compiled programs (``max_batch``, ``n_levels``,
+        ``knn_impl``, ``interpret``, ``donate``, or a different ``cfg``)
+        drops the executables and falls back to jit + the persistent
+        compilation cache.
+        """
+        tree = artifact_lib.load_artifact(path)
+        aot_valid = cfg is None
+        if cfg is None:
+            known = {f.name for f in dataclasses.fields(GNNConfig)}
+            stored = {k: v for k, v in tree.get("cfg", {}).items()
+                      if k in known}
+            for k, v in stored.items():       # msgpack lists -> tuples
+                if isinstance(v, list):
+                    stored[k] = tuple(v)
+            cfg = GNNConfig(**stored)
+        knobs = dict(tree.get("knobs", {}))
+        for k in ("knn_impl", "interpret", "donate"):
+            knobs[k] = tree.get(k)
+        if tree.get("auto"):
+            cfg = cfg.replace(bucket_policy="auto")
+        for k, v in kw.items():
+            if k in cls._AOT_KNOBS + ("knn_impl", "interpret", "donate") \
+                    and v != knobs.get(k):
+                aot_valid = False
+            knobs[k] = v
+        knobs["interpret"] = bool(knobs.get("interpret", True))
+        knobs["donate"] = bool(knobs.get("donate", True))
+
+        def norm_pair(d):
+            if d is None:
+                return None
+            return (np.asarray(d["mean"], np.float32),
+                    np.asarray(d["std"], np.float32))
+
+        ref = tree["reference"]
+        calib = {int(n): artifact_lib.unpack_multiscale_spec(d)
+                 for n, d in tree.get("calib", {}).items()}
+        aot = {}
+        if aot_valid:
+            for n, blob in tree.get("aot", {}).items():
+                ex = artifact_lib.deserialize_compiled(blob)
+                if ex is not None:
+                    aot[int(n)] = ex
+        live = [int(n) for n in tree.get("live", ())]
+        bucket_sizes: Union[str, Sequence[int]] = \
+            tuple(live) if live else "auto"
+        restore = {
+            "calib": calib,
+            "aot": aot,
+            "ladder": [int(n) for n in tree.get("ladder", ())],
+            "size_hist": [int(s) for s in tree.get("size_hist", ())],
+        }
+        return cls(cfg, bucket_sizes, params=tree["params"],
+                   norm_in=norm_pair(tree.get("norm_in")),
+                   norm_out=norm_pair(tree.get("norm_out")),
+                   reference=(np.asarray(ref["verts"], np.float32),
+                              np.asarray(ref["faces"])),
+                   _restore=restore, **knobs)
 
     # ------------------------------------------------- bucket ladder / cache
 
@@ -848,11 +1116,18 @@ class GNNServer:
 
         jit tracing/compilation happens synchronously inside the call (the
         device execution stays async), so jit-cache growth across the call
-        is exactly the number of fresh compiles — a warm call counts zero,
-        which is what makes the cache hit/eviction stats trustworthy.
+        is the number of fresh *programs* — a warm call counts zero, which
+        is what makes the cache hit/eviction stats trustworthy. With the
+        persistent compilation cache enabled, a fresh program may be a
+        millisecond disk load rather than a true XLA compile: the
+        monitoring-event deltas (``CompileEvents``) attribute the growth to
+        ``bucket_compiles`` (true compiles) vs ``cache_loads``, so a
+        restarted server that re-traces everything but compiles nothing
+        reports zero compiles.
         """
         cache_size = getattr(fn, "_cache_size", None)
         before = cache_size() if cache_size is not None else None
+        ev = compile_cache.CompileEvents() if before is not None else None
         t0 = time.perf_counter()
         with self.telemetry.annotate(f"serve/call_b{b.n_points}"):
             out = fn(*args)
@@ -860,14 +1135,26 @@ class GNNServer:
             grew = cache_size() - before
             if grew > 0:
                 t1 = time.perf_counter()
-                b.compiles += grew
+                misses, hits = ev.delta()
+                if misses + hits == 0:
+                    # no persistent cache (or no listener): every fresh
+                    # program is a backend compile, as before
+                    compiles = grew
+                else:
+                    compiles = min(grew, misses)
+                loads = grew - compiles
+                b.compiles += compiles
+                b.cache_loads += loads
                 with self.stats.lock:
-                    self.stats.bucket_compiles += grew
+                    self.stats.bucket_compiles += compiles
+                    self.stats.cache_loads += loads
                 # the call's wall time on a cache miss IS the compile (trace
                 # + lower + compile; device execution stays async)
-                self.stats.record_stage("compile", t1 - t0)
+                stage = "compile" if compiles else "cache_load"
+                self.stats.record_stage(stage, t1 - t0)
                 self.telemetry.tracer.record_span(
-                    "compile", t0, t1, bucket=b.n_points, compiles=grew)
+                    stage, t0, t1, bucket=b.n_points, compiles=compiles,
+                    cache_loads=loads)
         return out
 
     def _padding_of(self, b: Bucket, req: Request) -> Tuple[int, int]:
@@ -1247,6 +1534,18 @@ def main():
     ap.add_argument("--ckpt", default=None,
                     help="serve trained weights + normalizer stats from a "
                     "launch.train checkpoint")
+    ap.add_argument("--compile-cache", default=None,
+                    help="persistent XLA compilation cache directory: "
+                    "recompiles of previously-seen bucket programs become "
+                    "disk loads across restarts / ladder growth / eviction")
+    ap.add_argument("--save-artifact", default=None,
+                    help="after serving, freeze the adapted server (ladder, "
+                    "histogram, calibrated specs, AOT executables) into "
+                    "this deploy-artifact file")
+    ap.add_argument("--artifact", default=None,
+                    help="restore the server from a deploy artifact "
+                    "(GNNServer.from_artifact): first request served with "
+                    "zero XLA compiles")
     ap.add_argument("--shard-devices", type=int, default=1,
                     help="split each request across this many devices "
                     "(requires that many jax devices, e.g. via "
@@ -1274,25 +1573,38 @@ def main():
         cfg = cfg.replace(bucket_granularity=args.bucket_granularity)
     if args.refit_every is not None:
         cfg = cfg.replace(bucket_refit_every=args.refit_every)
+    if args.compile_cache:
+        cfg = cfg.replace(compile_cache_dir=args.compile_cache)
     auto = args.buckets.strip().lower() == "auto"
     buckets = "auto" if auto else \
         tuple(int(b) for b in args.buckets.split(","))
     kw = dict(max_batch=args.max_batch, knn_impl=args.knn_impl,
               agg_impl=args.agg_impl, shard_devices=args.shard_devices,
               async_flush=not args.sync)
-    if args.ckpt:
+    if args.artifact:
+        # the artifact carries its own cfg; apply the CLI cache dir directly
+        compile_cache.enable(args.compile_cache)
+        server = GNNServer.from_artifact(args.artifact, cfg=None,
+                                         agg_impl=args.agg_impl,
+                                         async_flush=not args.sync)
+        auto = server.auto
+        print(f"restored deploy artifact {args.artifact}: "
+              f"buckets {list(server.ladder())}, "
+              f"{len(server._aot)} AOT executables")
+    elif args.ckpt:
         server = GNNServer.from_checkpoint(args.ckpt, cfg, buckets, **kw)
         print(f"loaded checkpoint {args.ckpt}")
     else:
         server = GNNServer(cfg, buckets, **kw)
     t0 = time.perf_counter()
-    server.warmup()
-    if auto:
-        print("autoscaling buckets: ladder derived from traffic "
-              "(no warmup compiles)")
-    else:
-        print(f"warmup (compile {len(buckets)} buckets): "
-              f"{time.perf_counter() - t0:.1f}s")
+    if not args.artifact:
+        server.warmup()
+        if auto:
+            print("autoscaling buckets: ladder derived from traffic "
+                  "(no warmup compiles)")
+        else:
+            print(f"warmup (compile {len(buckets)} buckets): "
+                  f"{time.perf_counter() - t0:.1f}s")
 
     rng = np.random.default_rng(1)
     req_sizes = (128, 192, 256) if auto else buckets
@@ -1319,8 +1631,17 @@ def main():
               f"hits {rep['bucket_hits']} misses {rep['bucket_misses']} "
               f"evictions {rep['bucket_evictions']} "
               f"compiles {rep['bucket_compiles']} "
+              f"cache loads {rep['cache_loads']} "
               f"grown {rep['grown_buckets']} | "
               f"padding waste {rep['padding_waste_frac']:.1%}")
+    if args.artifact:
+        print(f"cold start: compiles {rep['bucket_compiles']} "
+              f"cache loads {rep['cache_loads']} "
+              f"calibrations {rep['bucket_calibrations']}")
+    if args.save_artifact:
+        info = server.save_artifact(args.save_artifact)
+        print(f"deploy artifact -> {info['path']} "
+              f"(buckets {info['buckets']}, AOT {info['aot_buckets']})")
     for r in results[:3]:
         cp = r.fields[:, 0]
         print(f"  req {r.request_id}: bucket {r.bucket}, "

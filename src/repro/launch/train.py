@@ -33,6 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.ckpt import checkpoint as ckpt
+from repro.ckpt import compile_cache
 from repro.configs import get_config
 from repro.configs.base import GNNConfig
 from repro.core import distributed_mgn as dmgn
@@ -42,7 +43,7 @@ from repro.data.tokens import token_batches
 from repro.launch.sharding import mesh_for_shards, shard_count_for, shard_put
 from repro.models import meshgraphnet as mgn
 from repro.models import registry
-from repro.optim.adam import AdamConfig, adam_init, adam_update
+from repro.optim.adam import AdamConfig, AdamState, adam_init, adam_update
 from repro.telemetry import Telemetry, default_latency_buckets
 
 # training-loop stages whose wall time lands in the metrics registry as
@@ -123,13 +124,29 @@ def train_gnn(cfg: GNNConfig, steps: int, n_samples: int,
               agg_impl: str | None = None,
               graph_source: str | None = None,
               shard_devices: Optional[int] = None,
-              telemetry: Optional[Telemetry] = None):
+              telemetry: Optional[Telemetry] = None,
+              ckpt_every: int = 0, resume: str | None = None,
+              opt_total_steps: Optional[int] = None):
     """Train X-MeshGraphNet on partitioned synthetic DrivAerML-proxy data.
 
     ``shard_devices`` caps the partition-parallel width (``None`` = use as
     many visible devices as divide ``cfg.n_partitions``; ``1`` forces the
     single-device scan path). ``graph_source`` overrides
     ``cfg.graph_source`` for the training-graph build.
+
+    Checkpointing: ``ckpt_path`` is written after the final step and —
+    with ``ckpt_every > 0`` — every that-many steps, on a background
+    thread (:class:`repro.ckpt.AsyncCheckpointer`: the loop never blocks
+    on checkpoint I/O; write seconds land in the ``checkpoint`` stage
+    histogram). The checkpoint carries params, the full Adam state
+    (step/mu/nu), the loop step, the LR-schedule horizon and the
+    normalizer stats, so ``resume=<path>`` continues the optimizer
+    trajectory EXACTLY: training N steps equals training k, crashing, and
+    resuming for the remaining N-k (pinned by
+    ``tests/test_train_resume.py``). ``opt_total_steps`` decouples the
+    cosine-schedule horizon from this invocation's ``steps`` — a resumed
+    run keeps the original horizon (stored in the checkpoint) so the LR
+    at step t is identical to the uninterrupted run's.
 
     ``telemetry`` (or the config's ``telemetry``/``trace_dir`` knobs)
     records the loop's stage timings: every stage lands in the metrics
@@ -142,6 +159,9 @@ def train_gnn(cfg: GNNConfig, steps: int, n_samples: int,
         cfg = cfg.replace(agg_impl=agg_impl)
     if graph_source is not None:
         cfg = cfg.replace(graph_source=graph_source)
+    # persistent XLA compile cache: a restarted/resumed trainer re-traces
+    # its step program but loads the backend executable from disk
+    compile_cache.enable(getattr(cfg, "compile_cache_dir", ""))
     tel = telemetry if telemetry is not None else Telemetry.from_config(cfg)
     hists = _stage_hists(tel)
     loss_gauge = tel.metrics.gauge("train_loss",
@@ -161,8 +181,35 @@ def train_gnn(cfg: GNNConfig, steps: int, n_samples: int,
         hists["partition"].observe(time.perf_counter() - t0)
 
     params = mgn.init(jax.random.PRNGKey(0), cfg)
-    opt_cfg = AdamConfig(total_steps=steps)
+    start_step = 0
+    restored = None
+    if resume:
+        restored = ckpt.restore(resume)
+        if "params" not in restored:
+            raise ckpt.CheckpointError(
+                f"{resume!r} is not a training checkpoint (no 'params')")
+        params = restored["params"]
+    if opt_total_steps is None:
+        # a resumed run keeps the original cosine horizon so the LR
+        # trajectory matches the uninterrupted run's
+        opt_total_steps = int(restored["opt_total_steps"]) \
+            if restored and "opt_total_steps" in restored else steps
+    opt_cfg = AdamConfig(total_steps=int(opt_total_steps))
     opt = adam_init(params)
+    if restored is not None and "opt" in restored:
+        o = restored["opt"]
+        opt = AdamState(step=jnp.asarray(o["step"], jnp.int32),
+                        mu=o["mu"], nu=o["nu"])
+        start_step = int(restored.get("step", 0))
+        print(f"resumed {resume} at step {start_step} "
+              f"(schedule horizon {opt_cfg.total_steps})", flush=True)
+
+    def ckpt_tree(params, opt, next_step):
+        return {"params": params,
+                "opt": {"step": opt.step, "mu": opt.mu, "nu": opt.nu},
+                "step": int(next_step),
+                "opt_total_steps": int(opt_cfg.total_steps),
+                "norm_in": vars(norm_in), "norm_out": vars(norm_out)}
 
     n_shards = shard_count_for(cfg.n_partitions, limit=shard_devices)
     mesh = mesh_for_shards(n_shards) if n_shards > 1 else None
@@ -175,10 +222,12 @@ def train_gnn(cfg: GNNConfig, steps: int, n_samples: int,
     losses = []
     t_first = 0.0
     t_warm = 0.0
-    for it in range(steps):
+    writer = ckpt.AsyncCheckpointer(on_write=hists["checkpoint"].observe)
+    for it in range(start_step, steps):
         # stage one sample per step: at paper scale a padded partition batch
         # is GBs, so keeping every sample device-resident would defeat the
-        # single-accelerator mode
+        # single-accelerator mode. Indexing by the GLOBAL step keeps the
+        # sample sequence identical across a crash+resume.
         t0 = time.time()
         with tel.span("step", trace_id=f"step-{it}", it=it):
             tp0 = time.perf_counter()
@@ -186,7 +235,8 @@ def train_gnn(cfg: GNNConfig, steps: int, n_samples: int,
                 stacked, denom = prepare_gnn_batch(
                     psamples[it % len(psamples)], mesh)
             tp1 = time.perf_counter()
-            with tel.annotate(f"train/step{'_first' if it == 0 else ''}"):
+            first = it == start_step
+            with tel.annotate(f"train/step{'_first' if first else ''}"):
                 params, opt, loss, gnorm = step_fn(params, opt, stacked,
                                                    denom)
                 losses.append(float(loss))  # blocks until the step finishes
@@ -194,24 +244,30 @@ def train_gnn(cfg: GNNConfig, steps: int, n_samples: int,
         hists["step"].observe(time.perf_counter() - tp1)
         loss_gauge.set(float(loss))
         steps_ctr.inc()
+        if (ckpt_path and ckpt_every > 0 and (it + 1) % ckpt_every == 0
+                and it + 1 < steps):
+            # async: snapshot to host, write on the ckpt-writer thread —
+            # the loop only ever waits for the PREVIOUS write
+            with tel.span("checkpoint", path=ckpt_path, it=it):
+                writer.save(ckpt_path, ckpt_tree(params, opt, it + 1))
         dt = time.time() - t0
-        if it == 0:
+        if it == start_step:
             t_first = dt                   # compile + first execution
         else:
             t_warm += dt
         if it % log_every == 0:
             # warm s/step excludes the first step: folding compile into the
             # average overstates steady-state step time for the whole run
-            timing = (f"first+compile {t_first:.2f}s" if it == 0 else
-                      f"{t_warm / it:.2f}s/step warm, "
+            timing = (f"first+compile {t_first:.2f}s" if it == start_step
+                      else f"{t_warm / (it - start_step):.2f}s/step warm, "
                       f"first+compile {t_first:.2f}s")
             print(f"step {it:5d} loss {float(loss):.5f} "
                   f"gnorm {float(gnorm):.3f} ({timing})", flush=True)
+    writer.wait()                          # surface any background failure
     if ckpt_path:
         with tel.span("checkpoint", path=ckpt_path):
             t0 = time.perf_counter()
-            ckpt.save(ckpt_path, {"params": params, "norm_in": vars(norm_in),
-                                  "norm_out": vars(norm_out)})
+            ckpt.save(ckpt_path, ckpt_tree(params, opt, steps))
             hists["checkpoint"].observe(time.perf_counter() - t0)
     return params, losses, (train, test, norm_in, norm_out)
 
@@ -320,6 +376,22 @@ def main():
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--samples", type=int, default=6)
     ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0,
+                    help="also write --ckpt every N steps (async, on a "
+                    "background thread), not just after the final step")
+    ap.add_argument("--resume", default=None,
+                    help="continue training from this checkpoint: params, "
+                    "Adam state, step and LR-schedule horizon are restored "
+                    "so the optimizer trajectory matches an uninterrupted "
+                    "run exactly")
+    ap.add_argument("--total-steps", type=int, default=None,
+                    help="cosine-schedule horizon when it differs from "
+                    "--steps (a resumed run keeps the checkpoint's horizon "
+                    "by default)")
+    ap.add_argument("--compile-cache", default=None,
+                    help="persistent XLA compilation cache directory: a "
+                    "restarted trainer loads its step program from disk "
+                    "instead of recompiling")
     ap.add_argument("--graph-source", choices=("host", "graphx"),
                     default=None,
                     help="training-graph build: host cKDTree or the "
@@ -344,12 +416,16 @@ def main():
         if args.telemetry or args.trace_dir:
             cfg = cfg.replace(telemetry=True, trace_dir=args.trace_dir or "",
                               profile_capture=args.profile)
+        if args.compile_cache:
+            cfg = cfg.replace(compile_cache_dir=args.compile_cache)
         tel = Telemetry.from_config(cfg)
         with tel.capture():
             params, losses, (train, test, ni, no) = train_gnn(
                 cfg, args.steps, args.samples, args.ckpt,
                 graph_source=args.graph_source,
-                shard_devices=args.shard_devices, telemetry=tel)
+                shard_devices=args.shard_devices, telemetry=tel,
+                ckpt_every=args.ckpt_every, resume=args.resume,
+                opt_total_steps=args.total_steps)
             with tel.span("eval", n_samples=len(test)):
                 t0 = time.perf_counter()
                 metrics = eval_gnn(cfg, params, test, ni, no)

@@ -1,0 +1,123 @@
+"""Checkpoint durability + async writer: fsync-before-rename, corrupt-file
+errors, and the background-thread checkpointer's ordering/error contract."""
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.ckpt import checkpoint as ckpt
+from repro.ckpt.checkpoint import AsyncCheckpointer, CheckpointError
+
+
+def _tree():
+    return {"params": {"w": np.arange(12, dtype=np.float32).reshape(3, 4),
+                       "b": np.zeros((4,), np.float32)},
+            "opt": (np.int32(3), [1.0, 2.0]),
+            "step": 7, "name": "t", "blob": b"\x00\x01\x02"}
+
+
+def test_roundtrip_with_bytes_and_scalars(tmp_path):
+    p = str(tmp_path / "ck.msgpack")
+    ckpt.save(p, _tree())
+    out = ckpt.restore(p)
+    assert np.array_equal(out["params"]["w"],
+                          np.arange(12, dtype=np.float32).reshape(3, 4))
+    assert out["step"] == 7 and out["name"] == "t"
+    assert out["blob"] == b"\x00\x01\x02"
+    assert out["opt"][0] == 3
+
+
+def test_save_fsyncs_file_and_directory(tmp_path, monkeypatch):
+    """The crash-safety contract: the payload AND the directory entry are
+    fsync'd before save() returns — a rename without them can durably
+    publish a truncated checkpoint."""
+    synced = []
+    real_fsync = os.fsync
+    monkeypatch.setattr(os, "fsync", lambda fd: (synced.append(fd),
+                                                 real_fsync(fd))[1])
+    p = str(tmp_path / "ck.msgpack")
+    ckpt.save(p, {"a": 1})
+    assert len(synced) >= 2        # temp file + containing directory
+
+
+def test_restore_truncated_raises_checkpoint_error(tmp_path):
+    p = str(tmp_path / "ck.msgpack")
+    ckpt.save(p, _tree())
+    raw = open(p, "rb").read()
+    with open(p, "wb") as f:
+        f.write(raw[:len(raw) // 2])
+    with pytest.raises(CheckpointError, match="corrupt or truncated"):
+        ckpt.restore(p)
+
+
+def test_restore_garbage_raises_checkpoint_error(tmp_path):
+    p = str(tmp_path / "junk.msgpack")
+    with open(p, "wb") as f:
+        f.write(b"\xc1not-msgpack" * 10)
+    with pytest.raises(CheckpointError):
+        ckpt.restore(p)
+
+
+def test_restore_error_names_path_and_size(tmp_path):
+    p = str(tmp_path / "short.msgpack")
+    with open(p, "wb") as f:
+        f.write(b"\x81")           # map header with no body
+    with pytest.raises(CheckpointError) as ei:
+        ckpt.restore(p)
+    assert "short.msgpack" in str(ei.value)
+    assert "1 bytes" in str(ei.value)
+
+
+def test_async_checkpointer_writes_and_orders(tmp_path):
+    p = str(tmp_path / "ck.msgpack")
+    times = []
+    w = AsyncCheckpointer(on_write=times.append)
+    for step in range(3):
+        w.save(p, {"step": step})
+    w.wait()
+    assert ckpt.restore(p)["step"] == 2       # last write wins, in order
+    assert len(times) == 3 and all(t >= 0 for t in times)
+
+
+def test_async_checkpointer_does_not_block_caller(tmp_path):
+    """save() returns while the (slowed) write is still in flight."""
+    gate = threading.Event()
+    orig = ckpt.save
+
+    def slow_save(path, tree):
+        gate.wait(timeout=10)
+        orig(path, tree)
+
+    w = AsyncCheckpointer()
+    try:
+        ckpt.save = slow_save
+        t0 = time.perf_counter()
+        w.save(str(tmp_path / "ck.msgpack"), {"a": 1})
+        assert time.perf_counter() - t0 < 5.0     # did not wait for the gate
+    finally:
+        gate.set()
+        ckpt.save = orig
+        w.wait()
+    assert ckpt.restore(str(tmp_path / "ck.msgpack"))["a"] == 1
+
+
+def test_async_checkpointer_surfaces_background_error(tmp_path):
+    blocker = tmp_path / "blocker"
+    blocker.write_bytes(b"")
+    w = AsyncCheckpointer()
+    w.save(str(blocker / "ck.msgpack"), {"a": 1})   # parent is a file
+    with pytest.raises(OSError):
+        w.wait()
+    # the error is consumed: subsequent saves work again
+    w.save(str(tmp_path / "ok.msgpack"), {"a": 1})
+    w.wait()
+    assert ckpt.restore(str(tmp_path / "ok.msgpack"))["a"] == 1
+
+
+def test_async_checkpointer_context_manager(tmp_path):
+    p = str(tmp_path / "ck.msgpack")
+    with AsyncCheckpointer() as w:
+        w.save(p, {"done": True})
+    assert bool(ckpt.restore(p)["done"])

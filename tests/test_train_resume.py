@@ -1,0 +1,90 @@
+"""Crash-resume equivalence: train N steps == train k, stop, resume N-k.
+
+The checkpoint carries params, the full Adam state (step/mu/nu), the loop
+step and the cosine-schedule horizon, and the sample sequence indexes by the
+GLOBAL step — so the resumed optimizer trajectory matches the uninterrupted
+run's bit for bit.
+"""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.ckpt import checkpoint as ckpt
+from repro.configs.base import GNNConfig
+from repro.launch.train import train_gnn
+
+
+def _cfg():
+    return GNNConfig().reduced().replace(levels=(32, 64), n_partitions=2,
+                                         hidden=16, n_mp_layers=2, halo=2)
+
+
+def _max_diff(a, b):
+    return max(float(np.max(np.abs(np.asarray(x) - np.asarray(y))))
+               for x, y in zip(jax.tree_util.tree_leaves(a),
+                               jax.tree_util.tree_leaves(b)))
+
+
+def test_periodic_checkpoint_carries_opt_state(tmp_path):
+    p = str(tmp_path / "ck.msgpack")
+    # ckpt_every=2 with 3 steps: the periodic write at step 2 happens, then
+    # the final write at step 3 overwrites it
+    train_gnn(_cfg(), steps=3, n_samples=2, ckpt_path=p, log_every=100,
+              ckpt_every=2)
+    tree = ckpt.restore(p)
+    assert tree["step"] == 3
+    assert tree["opt_total_steps"] == 3
+    assert int(np.asarray(tree["opt"]["step"])) == 3
+    for k in ("params", "norm_in", "norm_out"):
+        assert k in tree
+    # mu/nu mirror the params tree
+    assert (jax.tree_util.tree_structure(tree["opt"]["mu"])
+            == jax.tree_util.tree_structure(tree["params"]))
+
+
+def test_resume_matches_uninterrupted_run(tmp_path):
+    cfg = _cfg()
+    full_ck = str(tmp_path / "full.msgpack")
+    p_full, losses_full, _ = train_gnn(cfg, steps=4, n_samples=2,
+                                       ckpt_path=full_ck, log_every=100)
+    # "crash" after 2 steps of a 4-step run: same schedule horizon
+    part_ck = str(tmp_path / "part.msgpack")
+    _, losses_head, _ = train_gnn(cfg, steps=2, n_samples=2,
+                                  ckpt_path=part_ck, log_every=100,
+                                  opt_total_steps=4)
+    p_res, losses_tail, _ = train_gnn(cfg, steps=4, n_samples=2,
+                                      log_every=100, resume=part_ck)
+    assert _max_diff(p_full, p_res) <= 1e-5
+    assert np.allclose(losses_head + losses_tail, losses_full, atol=1e-6)
+    # the resumed run's horizon came from the checkpoint, so the final
+    # params match the full run's exactly even though steps != total_steps
+    full_tree = ckpt.restore(full_ck)
+    assert full_tree["opt_total_steps"] == 4
+
+
+def test_resume_rejects_non_checkpoint(tmp_path):
+    p = str(tmp_path / "bogus.msgpack")
+    ckpt.save(p, {"not_params": 1})
+    with pytest.raises(ckpt.CheckpointError, match="not a training"):
+        train_gnn(_cfg(), steps=2, n_samples=2, resume=p)
+
+
+def test_periodic_saves_survive_midrun_kill(tmp_path):
+    """The ckpt at step k (not just the final one) is a valid resume point:
+    simulate the crash by only training k steps elsewhere and comparing."""
+    cfg = _cfg()
+    p = str(tmp_path / "per.msgpack")
+    # ckpt_every=1, 3 steps -> periodic writes at steps 1,2 + final at 3;
+    # capture the step-2 state by resuming from a run stopped there
+    _, _, _ = train_gnn(cfg, steps=2, n_samples=2, ckpt_path=p,
+                        log_every=100, opt_total_steps=3, ckpt_every=1)
+    tree = ckpt.restore(p)
+    assert tree["step"] == 2 and tree["opt_total_steps"] == 3
+    p3, losses3, _ = train_gnn(cfg, steps=3, n_samples=2, log_every=100,
+                               resume=p)
+    ref, losses_ref, _ = train_gnn(cfg, steps=3, n_samples=2, log_every=100,
+                                   opt_total_steps=3)
+    assert _max_diff(p3, ref) <= 1e-5
+    assert np.allclose(losses3, losses_ref[2:], atol=1e-6)
