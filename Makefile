@@ -2,7 +2,7 @@ PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
 .PHONY: verify test bench-graph bench-serve bench-train bench-coldstart \
-	smoke trace
+	smoke trace chaos
 
 # tier-1 gate: full test suite + graph-build perf smoke
 verify: test bench-graph
@@ -31,6 +31,14 @@ bench-train:
 # quickest end-to-end signal: serving example on a reduced model
 smoke:
 	$(PY) examples/realtime_inference.py
+
+# chaos suite: fault injection through serving + training (crash/NaN/OOM
+# degradation invariants) plus the overload bench (admission control vs
+# uncapped queue under a burst); see README "Resilience & fault injection"
+chaos:
+	$(PY) -m pytest tests/test_resilience.py -x -q
+	cd benchmarks && PYTHONPATH=../src $(PY) bench_serve.py --smoke \
+		--only overload --json /tmp/bench_overload.json
 
 # capture a serving trace: spans (chrome://tracing) + Prometheus metrics
 # land in traces/serve/; see README "Observability"

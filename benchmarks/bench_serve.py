@@ -225,6 +225,55 @@ def bench_autoscale(cfg, reference, max_batch, smoke, rows, report):
                  f"auto={waste['auto']:.1%} vs static={waste['static']:.1%}"))
 
 
+def bench_overload(cfg, reference, max_batch, smoke, rows, report):
+    """Burst overload through the background worker: bounded admission
+    control (``max_queue_depth`` + reject shedding) vs an uncapped queue.
+
+    All requests are submitted as fast as the producer can; the worker
+    drains at device speed. The uncapped server serves everything (tail
+    latency grows with the backlog); the admission-controlled server sheds
+    the overflow immediately — p99 of the SERVED requests plus the shed
+    rate quantify the trade. Every submitted request must terminate in
+    exactly one Result either way.
+    """
+    bucket = 128 if smoke else 256
+    n_req = 24 if smoke else 64
+    depth = max_batch * 2
+    verts, faces = reference
+    report["overload"] = {"n_requests": n_req, "max_queue_depth": depth}
+    for name, kw in (("uncapped", {}),
+                     ("admission", dict(max_queue_depth=depth,
+                                        shed_policy="reject"))):
+        server = GNNServer(cfg, (bucket,), max_batch=max_batch,
+                           reference=reference, check_requests=False,
+                           seed=0, **kw)
+        server.warmup()
+        server.stats.reset()
+        server.start(deadline_s=0.002)
+        rids = [server.submit(verts, faces, bucket) for _ in range(n_req)]
+        results = [server.result(r, timeout=600.0) for r in rids]
+        server.stop()
+        assert len(results) == n_req          # every request terminated
+        served = [r for r in results if r.error is None]
+        shed = [r for r in results if r.error is not None]
+        assert all("queue full" in r.error for r in shed), \
+            [r.error for r in shed][:3]
+        rep = server.stats.report()
+        shed_rate = len(shed) / n_req
+        report["overload"][name] = {
+            "served": len(served), "shed": len(shed),
+            "shed_rate": shed_rate,
+            "served_p50_ms": rep["p50_ms"], "served_p99_ms": rep["p99_ms"],
+            "rejected_overload": rep["rejected_overload"],
+        }
+        rows.append((f"overload_{name}_p99", rep["p99_ms"] * 1e3,
+                     f"shed={shed_rate:.1%} served={len(served)}"))
+    # the knob's contract: no admission control -> nothing shed; bounded
+    # admission under a burst far beyond the bound -> overflow is shed
+    assert report["overload"]["uncapped"]["shed"] == 0, report["overload"]
+    assert report["overload"]["admission"]["shed"] > 0, report["overload"]
+
+
 def _coldstart_child(args):
     """Measure time-to-first-result in THIS fresh process (post-import).
 
@@ -360,6 +409,10 @@ def main():
     ap.add_argument("--compile-cache", default=None,
                     help="persistent XLA compile-cache dir for the "
                          "coldstart scenario (default: a fresh tmpdir)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated scenario subset to run "
+                         "(flush,agg,autoscale,coldstart,overload); "
+                         "default: all")
     ap.add_argument("--coldstart-child", default=None,
                     choices=("fresh", "artifact"),
                     help="internal: run as a coldstart measurement child")
@@ -395,15 +448,26 @@ def main():
             "smoke": bool(args.smoke),
         },
     }
-    bench_flush_modes(cfg, reqs, bucket, args.max_batch, reference, reps,
-                      rows, report)
-    bench_agg_impls(cfg, reqs, bucket, args.max_batch, reference, impls,
-                    rows, report)
-    bench_autoscale(cfg, reference, args.max_batch, args.smoke, rows,
-                    report)
-    bench_coldstart(cfg, bucket, args.max_batch, nu, nv, args.compile_cache,
-                    rows, report)
-    if args.smoke:
+    all_scenarios = ("flush", "agg", "autoscale", "coldstart", "overload")
+    scenarios = set((args.only or ",".join(all_scenarios)).split(","))
+    unknown = scenarios - set(all_scenarios)
+    assert not unknown, f"unknown --only scenarios: {sorted(unknown)}"
+    if "flush" in scenarios:
+        bench_flush_modes(cfg, reqs, bucket, args.max_batch, reference, reps,
+                          rows, report)
+    if "agg" in scenarios:
+        bench_agg_impls(cfg, reqs, bucket, args.max_batch, reference, impls,
+                        rows, report)
+    if "autoscale" in scenarios:
+        bench_autoscale(cfg, reference, args.max_batch, args.smoke, rows,
+                        report)
+    if "coldstart" in scenarios:
+        bench_coldstart(cfg, bucket, args.max_batch, nu, nv,
+                        args.compile_cache, rows, report)
+    if "overload" in scenarios:
+        bench_overload(cfg, reference, args.max_batch, args.smoke, rows,
+                       report)
+    if args.smoke and "flush" in scenarios:
         # CI contract: the JSON record carries the per-stage breakdown
         for key in ("sync", "async"):
             stages = report["flush"][key]["stages"]

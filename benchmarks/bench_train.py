@@ -67,7 +67,7 @@ def bench_mode(cfg, opt_cfg, params, opt, psamples, n_shards, iters):
         h_prep.observe(time.perf_counter() - t0)
 
     t0 = time.perf_counter()
-    _, _, loss, _ = step(params, opt, *batches[0])
+    _, _, loss, _, _ = step(params, opt, *batches[0])
     loss0 = float(loss)                       # sync
     cold_s = time.perf_counter() - t0
 
@@ -75,7 +75,7 @@ def bench_mode(cfg, opt_cfg, params, opt, psamples, n_shards, iters):
     for it in range(iters):
         stacked, denom = batches[it % len(batches)]
         t0 = time.perf_counter()
-        _, _, loss, _ = step(params, opt, stacked, denom)
+        _, _, loss, _, _ = step(params, opt, stacked, denom)
         float(loss)
         dt = time.perf_counter() - t0
         h_step.observe(dt)

@@ -19,16 +19,20 @@ and re-raises any background failure.
 """
 from __future__ import annotations
 
+import glob
 import os
+import re
 import tempfile
 import threading
 import time
-from typing import Any, Callable, Optional
+from typing import Any, Callable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
+
+from repro.resilience import faults
 
 _ARR = "__ndarray__"
 _TUP = "__tuple__"
@@ -91,12 +95,14 @@ def save(path: str, tree: Any) -> None:
     payload = msgpack.packb(_pack(tree), use_bin_type=True)
     d = os.path.dirname(os.path.abspath(path))
     os.makedirs(d, exist_ok=True)
+    faults.fire("ckpt.write")       # chaos: crash before any byte lands
     fd, tmp = tempfile.mkstemp(dir=d)
     try:
         with os.fdopen(fd, "wb") as f:
             f.write(payload)
             f.flush()
             os.fsync(f.fileno())
+        faults.fire("ckpt.rename")  # chaos: crash between write and publish
         os.replace(tmp, path)
         dirfd = os.open(d, os.O_RDONLY)
         try:
@@ -130,6 +136,80 @@ def restore(path: str) -> Any:
         raise CheckpointError(
             f"checkpoint {path!r} decoded but its payload is malformed: "
             f"{type(e).__name__}: {e}") from e
+
+
+# --------------------------------------------------- retention / fallback
+
+_STEP_RE = re.compile(r"\.step(\d+)$")
+
+
+def retained_path(path: str, step: int) -> str:
+    """The step-tagged sibling ``<path>.stepNNNNNNNN`` of a checkpoint."""
+    return f"{path}.step{int(step):08d}"
+
+
+def retained_steps(path: str) -> List[Tuple[int, str]]:
+    """Existing step-tagged siblings of ``path`` as ``(step, path)``,
+    ascending by step."""
+    out = []
+    for p in glob.glob(glob.escape(path) + ".step*"):
+        m = _STEP_RE.search(p)
+        if m:
+            out.append((int(m.group(1)), p))
+    return sorted(out)
+
+
+def prune_retained(path: str, keep: int) -> List[str]:
+    """Delete step-tagged siblings beyond the ``keep`` newest; returns the
+    deleted paths. ``keep <= 0`` prunes nothing (unbounded retention)."""
+    if keep <= 0:
+        return []
+    doomed = [p for _, p in retained_steps(path)[:-keep]]
+    for p in doomed:
+        try:
+            os.unlink(p)
+        except FileNotFoundError:
+            pass                      # a concurrent prune got there first
+    return doomed
+
+
+def save_retained(path: str, tree: Any, step: int, keep: int) -> str:
+    """Write ``tree`` to the step-tagged sibling of ``path`` and prune the
+    retention window down to ``keep`` files. Returns the written path."""
+    p = retained_path(path, step)
+    save(p, tree)
+    prune_retained(path, keep)
+    return p
+
+
+def restore_with_fallback(path: str) -> Tuple[Any, str, List[str]]:
+    """Restore ``path``, falling back past corrupt checkpoints.
+
+    Candidates are ``path`` itself plus every step-tagged retention
+    sibling, tried newest-first (mtime order, step as tiebreak). A
+    candidate that raises :class:`CheckpointError` is skipped; the first
+    intact one wins. Returns ``(tree, used_path, skipped_paths)`` so the
+    caller can log exactly which corrupt files were passed over. Raises
+    :class:`CheckpointError` if no candidate survives.
+    """
+    by_step = {p: s for s, p in retained_steps(path)}
+    cand = ([path] if os.path.exists(path) else []) + sorted(by_step)
+    if not cand:
+        raise CheckpointError(f"no checkpoint found at {path!r} "
+                              "(no file, no retained .stepNNN siblings)")
+    cand.sort(key=lambda p: (os.path.getmtime(p), by_step.get(p, -1)),
+              reverse=True)
+    skipped: List[str] = []
+    last_err: Optional[CheckpointError] = None
+    for p in cand:
+        try:
+            return restore(p), p, skipped
+        except CheckpointError as e:
+            skipped.append(p)
+            last_err = e
+    raise CheckpointError(
+        f"every checkpoint candidate for {path!r} is corrupt "
+        f"(tried {cand})") from last_err
 
 
 class AsyncCheckpointer:

@@ -188,6 +188,32 @@ class GNNConfig:
     # (GNNServer.save_artifact / from_artifact) go further and bundle
     # AOT-serialized executables so a restored server pays zero compiles.
     compile_cache_dir: str = ""
+    # resilience (repro.resilience + launch/serve_gnn hardening):
+    # - request_timeout_s: per-request serving deadline (0 = none); an
+    #   expired request is dropped from the plan before device work and
+    #   resolved as a timed-out Result.error. submit(..., timeout_s=)
+    #   overrides per request.
+    # - max_queue_depth / shed_policy: bounded admission control (0 =
+    #   unbounded). "reject" resolves overflow submits immediately as
+    #   Result.error + a rejected_overload stat; "block" makes submit()
+    #   wait for queue space (backpressure to the producer).
+    # - worker_max_restarts / worker_backoff_s: a crashed background
+    #   worker errors out its pending requests and restarts with capped
+    #   exponential backoff; beyond max restarts the server goes dead
+    #   (every submit resolves to an error, nobody hangs).
+    # - nonfinite_guard: serving scans harvested outputs per item
+    #   (NaN/Inf -> Result.error + nonfinite_results stat); training
+    #   skips the optimizer update on a nonfinite loss/grad step.
+    request_timeout_s: float = 0.0
+    max_queue_depth: int = 0
+    shed_policy: str = "reject"        # "reject" | "block"
+    worker_max_restarts: int = 3
+    worker_backoff_s: float = 0.05
+    worker_backoff_max_s: float = 2.0
+    nonfinite_guard: bool = True
+    keep_ckpts: int = 0            # training: retain the K newest periodic
+                                   # step-tagged checkpoints; restore falls
+                                   # back past a corrupt one (--keep-ckpts)
     remat: bool = True             # activation checkpointing (paper SV-D)
     dtype: str = "float32"
     source: str = "arXiv X-MeshGraphNet (NVIDIA 2024)"

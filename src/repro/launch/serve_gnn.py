@@ -124,6 +124,7 @@ from repro.graphx.multiscale import MultiscaleSpec
 from repro.graphx.pipeline import make_batched_infer_fn
 from repro.launch.sharding import mesh_for_shards, shard_put
 from repro.models import meshgraphnet
+from repro.resilience import faults
 from repro.telemetry import (MetricsRegistry, Telemetry,
                              default_size_buckets, warn_once)
 
@@ -189,6 +190,8 @@ class Request:
     request_id: int
     n_points: Optional[int] = None     # desired resolution (bucket-quantized)
     t_submit: float = 0.0
+    deadline: Optional[float] = None   # perf_counter() time after which the
+                                       # request is dropped, not served
 
 
 @dataclass
@@ -235,8 +238,21 @@ class ServerStats:
     grown_buckets: int = 0             # ladder sizes added for oversize asks
     padding_points: int = 0            # computed-but-unrequested points
     requested_points: int = 0          # points actually asked for
+    # resilience counters (each mirrored to a Prometheus counter
+    # serve_<name>_total via bump(), so monitors see them live)
+    timed_out_requests: int = 0        # deadline expired before device work
+    rejected_overload: int = 0         # shed by bounded admission control
+    nonfinite_results: int = 0         # NaN/Inf caught at harvest
+    worker_crashes: int = 0            # _serve_loop died (supervised)
+    worker_restarts: int = 0           # supervisor restarts after a crash
+    quarantined_buckets: int = 0       # sizes pulled after build/compile fail
+    bucket_fallbacks: int = 0          # batches served by a larger bucket
     lock: threading.Lock = field(default_factory=threading.Lock,
                                  repr=False, compare=False)
+
+    _RESILIENCE = ("timed_out_requests", "rejected_overload",
+                   "nonfinite_results", "worker_crashes", "worker_restarts",
+                   "quarantined_buckets", "bucket_fallbacks")
 
     def __post_init__(self):
         self._recent_lat: deque = deque(maxlen=self.recent_cap)
@@ -255,6 +271,25 @@ class ServerStats:
             s: m.histogram(f"serve_{s}_seconds",
                            help=f"serving stage time: {s}")
             for s in SERVE_STAGES}
+        # resilience: counters monitors can alert on + health gauges
+        self._counters = {
+            name: m.counter(f"serve_{name}_total",
+                            help=f"resilience counter: {name}")
+            for name in self._RESILIENCE}
+        self.g_worker_alive = m.gauge(
+            "serve_worker_alive",
+            help="1 while the background serve worker is running")
+        self.g_queue_depth = m.gauge(
+            "serve_queue_depth", help="requests currently queued")
+        self.g_last_flush = m.gauge(
+            "serve_last_flush_timestamp",
+            help="unix time the worker last published results")
+
+    def bump(self, name: str, n: int = 1):
+        """Increment a resilience counter (scalar field + Prometheus)."""
+        with self.lock:
+            setattr(self, name, getattr(self, name) + n)
+        self._counters[name].inc(n)
 
     # ------------------------------------------------------------ recording
 
@@ -306,6 +341,8 @@ class ServerStats:
             self.grown_buckets = 0
             self.padding_points = 0
             self.requested_points = 0
+            for name in self._RESILIENCE:
+                setattr(self, name, 0)
             self._recent_lat.clear()
             self._recent_batch.clear()
         self.metrics.reset()
@@ -341,6 +378,8 @@ class ServerStats:
                 "bucket_calibrations": self.bucket_calibrations,
                 "grown_buckets": self.grown_buckets,
             }
+            counters.update({name: getattr(self, name)
+                             for name in self._RESILIENCE})
             padded = self.padding_points
             requested = self.requested_points
         n = self._h_latency.count
@@ -402,6 +441,10 @@ class GNNServer:
                  reject_overflow: bool = False, shard_devices: int = 1,
                  shard_pad_factor: float = 1.3, async_flush: bool = True,
                  donate: bool = True, telemetry: Optional[Telemetry] = None,
+                 max_queue_depth: Optional[int] = None,
+                 shed_policy: Optional[str] = None,
+                 request_timeout_s: Optional[float] = None,
+                 worker_max_restarts: Optional[int] = None,
                  _restore: Optional[dict] = None):
         # persistent XLA compile cache: recompiles of previously-seen bucket
         # programs (restart, ladder growth, LRU evict→rebuild) hit disk
@@ -481,6 +524,28 @@ class GNNServer:
         self._worker: Optional[threading.Thread] = None
         self._stop_flag = False
         self._deadline_s = 0.0
+        # resilience knobs (constructor overrides the config's defaults)
+        self.max_queue_depth = int(cfg.max_queue_depth
+                                   if max_queue_depth is None
+                                   else max_queue_depth)
+        self.shed_policy = (cfg.shed_policy if shed_policy is None
+                            else shed_policy)
+        if self.shed_policy not in ("reject", "block"):
+            raise ValueError("shed_policy must be 'reject' or 'block', "
+                             f"got {self.shed_policy!r}")
+        self.request_timeout_s = float(cfg.request_timeout_s
+                                       if request_timeout_s is None
+                                       else request_timeout_s)
+        self.worker_max_restarts = int(cfg.worker_max_restarts
+                                       if worker_max_restarts is None
+                                       else worker_max_restarts)
+        self._quarantined: set = set()    # sizes pulled after build/compile
+                                          # failures (excluded from routing)
+        self._inflight: List[Request] = []  # popped from queues, result not
+                                            # yet published (crash cleanup)
+        self._worker_dead = False         # supervision gave up: every submit
+                                          # resolves to an immediate error
+        self._restarts = 0
         self._mesh = (mesh_for_shards(self.shard_devices)
                       if self.shard_devices > 1 else None)
         # grid specs are calibrated from a reference geometry representative
@@ -519,6 +584,7 @@ class GNNServer:
         ms = self._calib.get(n)
         if ms is not None:
             return ms
+        faults.fire("bucket.calibrate")
         cfg = self.cfg
         levels = _level_sizes(n, self.n_levels)
         ref_pts, _ = self._sample_reference(n)
@@ -544,6 +610,7 @@ class GNNServer:
         cache, which count as ``cache_loads`` instead.
         """
         cfg = self.cfg
+        faults.fire("bucket.build")
         ms = self._calibrate(n)
         if self.shard_devices > 1:
             ref_pts, ref_nrm = self._sample_reference(n)
@@ -801,7 +868,13 @@ class GNNServer:
         question without growing, warning or counting.
         """
         with self._cond:
-            sizes = sorted(set(self._buckets) | self._ladder)
+            sizes = sorted((set(self._buckets) | self._ladder)
+                           - self._quarantined)
+            if not sizes and not self.auto:
+                raise RuntimeError(
+                    "no live bucket can serve: every ladder size is "
+                    f"quarantined ({sorted(self._quarantined)}) after "
+                    "build/compile failures")
             if n_points is None:
                 if sizes:
                     return sizes[-1]
@@ -852,6 +925,7 @@ class GNNServer:
                    for q in self.cfg.bucket_quantiles}
         if self._ladder:
             targets.add(max(self._ladder))    # never shrink oversize coverage
+        targets -= self._quarantined          # never re-target a failed size
         cap = max(int(self.cfg.max_live_buckets), 1)
         self._ladder = set(sorted(targets)[-cap:])
 
@@ -898,24 +972,162 @@ class GNNServer:
                         self.stats.bucket_evictions += 1
         return b
 
+    # ------------------------------------------- quarantine / degradation
+
+    def _quarantine(self, n: int, err: Exception):
+        """Pull a failed size out of service: drop its bucket + ladder
+        entry so no future request routes to it; traffic falls back to the
+        next-larger live size (see ``_dispatch_item``). Warn-once."""
+        with self._cond:
+            if n in self._quarantined:
+                return
+            self._quarantined.add(n)
+            self._buckets.pop(n, None)
+            self._ladder.discard(n)
+        self.stats.bump("quarantined_buckets")
+        msg = (f"bucket {n} quarantined after a build/compile failure "
+               f"({type(err).__name__}: {err}); traffic falls back to the "
+               "next-larger live bucket")
+        if self._warn_once(("quarantine", n), msg):
+            warnings.warn(msg)
+
+    def _next_size_above(self, size: int) -> Optional[int]:
+        """Smallest non-quarantined routable size strictly above ``size``."""
+        with self._cond:
+            cands = sorted(s for s in set(self._buckets) | self._ladder
+                           if s > size and s not in self._quarantined)
+        return cands[0] if cands else None
+
+    def _dispatch_item(self, n: int, batch: List[Request],
+                       record: bool = True) -> _InFlight:
+        """prepare+dispatch one work item, degrading past failed buckets.
+
+        A bucket whose build or compile raises is quarantined and the
+        batch retries on the next-larger live size (counted in
+        ``stats.bucket_fallbacks``); only when no larger size exists does
+        the failure propagate. Host-side prepare errors (bad geometry)
+        propagate immediately — they are the request's fault, not the
+        bucket's.
+        """
+        size: Optional[int] = n
+        last_err: Optional[Exception] = None
+        while size is not None:
+            try:
+                b = self._ensure_bucket(size)
+            except Exception as e:
+                last_err = e
+                self._quarantine(size, e)
+                size = self._next_size_above(size)
+                continue
+            if size != n:
+                with self._cond:       # shield the fallback bucket from LRU
+                    self._plan_sizes.add(size)
+            pre, ok, samples = self._prepare(b, batch, record)
+            try:
+                fl = self._dispatch(b, pre, ok, samples, record)
+            except Exception as e:
+                last_err = e
+                self._quarantine(size, e)
+                size = self._next_size_above(size)
+                continue
+            if size != n and record:
+                self.stats.bump("bucket_fallbacks")
+            return fl
+        raise last_err if last_err is not None else RuntimeError(
+            f"no live bucket can serve size {n}")
+
+    def _timeout_result(self, n: int, req: Request) -> Result:
+        """Resolve one deadline-expired request (never reached the device)."""
+        self.stats.bump("timed_out_requests")
+        t = time.perf_counter()
+        waited = t - (req.t_submit or t)
+        return Result(request_id=req.request_id,
+                      points=np.zeros((0, 3), np.float32),
+                      fields=np.zeros((0, self.cfg.node_out), np.float32),
+                      latency_s=waited, bucket=n, batch_size=0,
+                      error=f"deadline exceeded: request waited "
+                            f"{waited * 1e3:.1f} ms, dropped before "
+                            "device work")
+
+    def _resolve_error_locked(self, bucket: int, reason: str) -> int:
+        """Allocate a rid and resolve it immediately as an error Result
+        (shed/dead-server submits). Caller holds ``_cond``."""
+        rid = self._next_id
+        self._next_id += 1
+        self._done[rid] = Result(
+            request_id=rid, points=np.zeros((0, 3), np.float32),
+            fields=np.zeros((0, self.cfg.node_out), np.float32),
+            latency_s=0.0, bucket=bucket, batch_size=0, error=reason)
+        self._cond.notify_all()
+        return rid
+
     def submit(self, verts: np.ndarray, faces: np.ndarray,
-               n_points: Optional[int] = None) -> int:
+               n_points: Optional[int] = None, *,
+               timeout_s: Optional[float] = None) -> int:
         """Enqueue a geometry; returns the request id. Thread-safe; wakes
-        the background worker (if running)."""
+        the background worker (if running).
+
+        ``timeout_s`` (default ``cfg.request_timeout_s``; 0/None = no
+        deadline) bounds how long the request may wait before device work
+        starts — an expired request is dropped from the plan and resolved
+        as a timed-out ``Result.error`` instead of being served late.
+
+        Bounded admission (``max_queue_depth > 0``): beyond the bound a
+        ``shed_policy="reject"`` server resolves the submit immediately as
+        a ``Result.error`` (counted in ``stats.rejected_overload``); under
+        ``"block"`` the call waits for queue space (backpressure). A dead
+        server (worker crashed beyond its restart budget, or stopped with
+        requests pending) also resolves submits immediately — a client
+        waiting on ``result()`` NEVER hangs because of a submit that can
+        no longer be served.
+        """
         # geometry copies can be multi-MB: do them OUTSIDE the lock so
         # producers never stall waiters / the worker on an array copy
         t0 = time.perf_counter()
         verts = np.asarray(verts, np.float32)
         faces = np.asarray(faces)
+        if timeout_s is None:
+            timeout_s = self.request_timeout_s or None
         t_route = time.perf_counter()
         bucket = self._route(n_points, mutate=True)   # auto mode may grow
         t_routed = time.perf_counter()
         with self._cond:
+            if self._worker_dead:
+                return self._resolve_error_locked(
+                    bucket, "server worker is dead (crashed beyond its "
+                    "restart budget); restart the server")
+            if self.max_queue_depth > 0:
+                depth = sum(len(q) for q in self._queues.values())
+                if depth >= self.max_queue_depth:
+                    if self.shed_policy == "reject":
+                        self.stats.bump("rejected_overload")
+                        return self._resolve_error_locked(
+                            bucket, f"rejected: queue full "
+                            f"(max_queue_depth={self.max_queue_depth}, "
+                            "shed_policy='reject')")
+                    # "block": backpressure the producer until the worker
+                    # drains (or the server stops/dies — then resolve with
+                    # an error instead of deadlocking the producer)
+                    while True:
+                        depth = sum(len(q) for q in self._queues.values())
+                        if (depth < self.max_queue_depth
+                                or self._worker is None):
+                            break
+                        if self._worker_dead:
+                            return self._resolve_error_locked(
+                                bucket, "server worker died while this "
+                                "submit was blocked on queue space")
+                        self._cond.wait(timeout=0.05)
             rid = self._next_id
             self._next_id += 1
+            now = time.perf_counter()
             self._queues.setdefault(bucket, deque()).append(
                 Request(verts=verts, faces=faces, request_id=rid,
-                        n_points=n_points, t_submit=time.perf_counter()))
+                        n_points=n_points, t_submit=now,
+                        deadline=None if not timeout_s
+                        else now + float(timeout_s)))
+            self.stats.g_queue_depth.set(
+                sum(len(q) for q in self._queues.values()))
             if self.auto:
                 self._size_hist.append(bucket if n_points is None
                                        else int(n_points))
@@ -1001,6 +1213,23 @@ class GNNServer:
                       latency_s=t - (req.t_submit or t), bucket=n_points,
                       batch_size=0, error=reason)
 
+    def _nonfinite_result(self, b: Bucket, req: Request,
+                          vals: np.ndarray) -> Result:
+        """Resolve one request whose harvested output carried NaN/Inf."""
+        self.stats.bump("nonfinite_results")
+        total = int(np.size(vals))
+        bad = total - int(np.isfinite(vals).sum())
+        msg = (f"nonfinite output detected at harvest: {bad} of {total} "
+               f"values are NaN/Inf (bucket {b.n_points})")
+        if self._warn_once(("nonfinite", b.n_points), msg):
+            warnings.warn(msg)
+        nan = np.full((b.n_points, self.cfg.node_out), np.nan, np.float32)
+        t = time.perf_counter()
+        return Result(request_id=req.request_id,
+                      points=np.zeros((0, 3), np.float32), fields=nan,
+                      latency_s=t - (req.t_submit or t), bucket=b.n_points,
+                      batch_size=0, error=msg)
+
     # ------------------------------------------- prepare / dispatch / harvest
 
     def _prepare(self, b: Bucket, reqs: List[Request], record: bool):
@@ -1072,6 +1301,7 @@ class GNNServer:
         if not ok_reqs:
             return _InFlight(bucket=b, results=pre, ok_reqs=[], out=None,
                              pts=np.zeros((0,)), record=record)
+        faults.fire("serve.dispatch")
         if b.sspec is not None:
             # sharded: one request per dispatch (batch axis == shard axis)
             assert len(ok_reqs) == 1
@@ -1125,6 +1355,7 @@ class GNNServer:
         restarted server that re-traces everything but compiles nothing
         reports zero compiles.
         """
+        faults.fire("serve.compile")      # chaos: compile/OOM failure
         cache_size = getattr(fn, "_cache_size", None)
         before = cache_size() if cache_size is not None else None
         ev = compile_cache.CompileEvents() if before is not None else None
@@ -1188,11 +1419,16 @@ class GNNServer:
                 "device_wait", t0, t_sync, bucket=b.n_points,
                 batch=len(fl.ok_reqs))
         out = np.asarray(out_dev)
+        out = faults.corrupt("serve.harvest", out)   # chaos: device garbage
+        guard = self.cfg.nonfinite_guard
         if b.sspec is not None:
             [req] = fl.ok_reqs
             # the host-side gather back into one cloud is part of what the
             # client waits for — stamp completion after it
             fields = fl.plan.gather(out)
+            if guard and not np.isfinite(fields).all():
+                results.append(self._nonfinite_result(b, req, fields))
+                return results
             t_done = time.perf_counter()
             lat = t_done - (req.t_submit or t_done)
             results.append(Result(request_id=req.request_id, points=fl.pts,
@@ -1217,6 +1453,11 @@ class GNNServer:
         t_done = time.perf_counter()
         lats = []
         for i, req in enumerate(fl.ok_reqs):
+            if guard and not np.isfinite(out[i]).all():
+                # nonfinite garbage never reaches a client as data — the
+                # per-ITEM scan contains the blast radius to this request
+                results.append(self._nonfinite_result(b, req, out[i]))
+                continue
             lat = t_done - (req.t_submit or t_done)
             lats.append(lat)
             results.append(Result(request_id=req.request_id, points=fl.pts[i],
@@ -1256,7 +1497,8 @@ class GNNServer:
     # ------------------------------------------------------------- flushing
 
     def _drain_plan(self, ready_only: bool = False
-                    ) -> List[Tuple[int, List[Request]]]:
+                    ) -> Tuple[List[Tuple[int, List[Request]]],
+                               List[Tuple[int, Request]]]:
         """Pop queued requests into (bucket size, batch) work items.
 
         Deterministic order: ascending bucket size, FIFO within a bucket.
@@ -1266,15 +1508,30 @@ class GNNServer:
         Work items carry the SIZE, not the bucket: under the autoscaler a
         bucket may not be built yet — ``_run_plan`` resolves it through the
         compiled-program cache outside this lock.
+
+        Requests whose per-request deadline has expired are filtered out
+        FIRST (before batching) and returned separately as ``(size,
+        request)`` pairs — they never reach device work; the caller
+        resolves them as timed-out error Results.
         """
         now = time.perf_counter()
         width = 1 if self.shard_devices > 1 else self.max_batch
         plan: List[Tuple[int, List[Request]]] = []
+        timed_out: List[Tuple[int, Request]] = []
         for n in sorted(self._queues):
             q = self._queues[n]
+            if any(r.deadline is not None and now >= r.deadline for r in q):
+                fresh: deque = deque()
+                while q:
+                    r = q.popleft()
+                    if r.deadline is not None and now >= r.deadline:
+                        timed_out.append((n, r))
+                    else:
+                        fresh.append(r)
+                q.extend(fresh)
             while q:
-                expired = now - q[0].t_submit >= self._deadline_s
-                if ready_only and len(q) < width and not expired:
+                due = now - q[0].t_submit >= self._deadline_s
+                if ready_only and len(q) < width and not due:
                     break
                 plan.append((n, [q.popleft()
                                  for _ in range(min(len(q), width))]))
@@ -1288,7 +1545,7 @@ class GNNServer:
                 tracer.record_span("queue_wait", req.t_submit, t_pop,
                                    trace_id=f"req-{req.request_id}",
                                    bucket=n)
-        return plan
+        return plan, timed_out
 
     def _item_error(self, n_points: int, batch: List[Request],
                     e: Exception) -> _InFlight:
@@ -1337,8 +1594,8 @@ class GNNServer:
         if not async_mode:
             for n, batch in plan:
                 try:
-                    b = self._ensure_bucket(n)
-                    results.extend(self._run_batch(b, batch))
+                    fl = self._dispatch_item(n, batch)
+                    results.extend(self._harvest(fl))
                 except Exception as e:
                     if not errors_as_results:
                         raise
@@ -1347,9 +1604,7 @@ class GNNServer:
             inflight: Optional[_InFlight] = None
             for n, batch in plan:
                 try:
-                    b = self._ensure_bucket(n)
-                    pre, ok, samples = self._prepare(b, batch, True)
-                    nxt = self._dispatch(b, pre, ok, samples, True)
+                    nxt = self._dispatch_item(n, batch)
                 except Exception as e:
                     if not errors_as_results:
                         raise
@@ -1384,12 +1639,17 @@ class GNNServer:
         Incompatible with a running background worker — a foreground flush
         would steal queued requests whose results ``result()`` waiters are
         blocked on, so it raises instead.
+
+        Deadline-expired requests come back first as timed-out error
+        Results (they never reach device work), then served results in
+        deterministic drain order.
         """
         self._assert_no_worker()
         with self._cond:
-            plan = self._drain_plan()
-        return self._run_plan(plan, self.async_flush
-                              if async_mode is None else async_mode)
+            plan, timed_out = self._drain_plan()
+        expired = [self._timeout_result(n, req) for n, req in timed_out]
+        return expired + self._run_plan(plan, self.async_flush
+                                        if async_mode is None else async_mode)
 
     def _assert_no_worker(self):
         if self._worker is not None:
@@ -1404,12 +1664,18 @@ class GNNServer:
 
         Guarded against a running background worker BEFORE submitting —
         otherwise the rejected call would still have leaked its requests
-        into the worker's queues.
+        into the worker's queues. Submits resolved without queueing
+        (admission-shed, dead server) are merged in from the result
+        buffer after the flush.
         """
         self._assert_no_worker()
-        for verts, faces, n_points in requests:
-            self.submit(verts, faces, n_points)
-        return self.flush()
+        rids = [self.submit(verts, faces, n_points)
+                for verts, faces, n_points in requests]
+        results = self.flush()
+        with self._cond:
+            shed = [self._done.pop(rid) for rid in rids
+                    if rid in self._done]
+        return results + shed
 
     # ------------------------------------------------- background front-end
 
@@ -1431,12 +1697,21 @@ class GNNServer:
         self._deadline_s = float(deadline_s)
         self._done_cap = max(int(result_cap), 1)
         self._stop_flag = False
-        self._worker = threading.Thread(target=self._serve_loop, daemon=True,
+        self._worker_dead = False
+        self._restarts = 0
+        self.stats.g_worker_alive.set(1)
+        self._worker = threading.Thread(target=self._worker_main, daemon=True,
                                         name="gnn-serve-worker")
         self._worker.start()
 
     def stop(self):
-        """Stop the worker after draining everything still queued."""
+        """Stop the worker after draining everything still queued.
+
+        NEVER strands a ``result()`` waiter: anything the worker could not
+        drain (it crashed, died beyond its restart budget, or a submit
+        raced the final drain) is resolved as a ``Result.error("server
+        stopped ...")`` and waiters are notified.
+        """
         if self._worker is None:
             return
         with self._cond:
@@ -1444,6 +1719,53 @@ class GNNServer:
             self._cond.notify_all()
         self._worker.join()
         self._worker = None
+        self.stats.g_worker_alive.set(0)
+        # the graceful path drained everything; this catches the crashed /
+        # dead-worker paths and submit-vs-final-drain races
+        self._fail_pending("server stopped with this request unserved")
+
+    def _fail_pending(self, reason: str):
+        """Resolve every queued + in-flight request as an error Result and
+        wake all waiters (worker crash / dead server / stop races)."""
+        with self._cond:
+            orphans = list(self._inflight)
+            self._inflight = []
+            for n in sorted(self._queues):
+                q = self._queues[n]
+                while q:
+                    orphans.append(q.popleft())
+            for req in orphans:
+                self._done[req.request_id] = self._reject(
+                    req, 0, reason, np.zeros((0, 3), np.float32), True)
+            self.stats.g_queue_depth.set(0)
+            if orphans:
+                self._cond.notify_all()
+
+    def health(self) -> dict:
+        """Liveness/backlog snapshot for monitors (also exported as the
+        ``serve_worker_alive`` / ``serve_queue_depth`` /
+        ``serve_last_flush_timestamp`` gauges)."""
+        with self._cond:
+            depth = sum(len(q) for q in self._queues.values())
+            inflight = len(self._inflight)
+            worker = self._worker
+            dead = self._worker_dead
+            quarantined = sorted(self._quarantined)
+        last_flush = self.stats.g_last_flush.value
+        with self.stats.lock:
+            errs = {name: getattr(self.stats, name)
+                    for name in self.stats._RESILIENCE}
+        return {
+            "worker_alive": bool(worker is not None and worker.is_alive()
+                                 and not dead),
+            "worker_dead": dead,
+            "queue_depth": depth,
+            "inflight": inflight,
+            "quarantined_buckets": quarantined,
+            "last_flush_age_s": (time.time() - last_flush
+                                 if last_flush else None),
+            **errs,
+        }
 
     def result(self, request_id: int, timeout: Optional[float] = None
                ) -> Result:
@@ -1469,44 +1791,105 @@ class GNNServer:
                 trace_id=f"req-{request_id}")
         return out
 
-    def _serve_loop(self):
+    def _worker_main(self):
+        """Worker supervisor: restart a crashed ``_serve_loop`` with capped
+        exponential backoff; past the restart budget mark the server dead.
+
+        Either way no waiter hangs: a crash resolves every queued and
+        in-flight request as an error Result (``_fail_pending``) before
+        the loop restarts, and a dead server resolves future submits
+        immediately (see ``submit``).
+        """
+        backoff = max(float(self.cfg.worker_backoff_s), 1e-3)
+        cap = max(float(self.cfg.worker_backoff_max_s), backoff)
         while True:
-            with self._cond:
-                plan = self._drain_plan(ready_only=not self._stop_flag)
-                if not plan:
+            try:
+                self._serve_loop()
+                return                         # graceful stop() drain
+            except BaseException as e:
+                self.stats.bump("worker_crashes")
+                log.error("serve worker crashed: %r", e)
+                self._fail_pending(f"server worker crashed: {e!r}")
+                with self._cond:
                     if self._stop_flag:
                         return
-                    # sleep until the oldest pending request's deadline
-                    # (or a submit/stop notification)
+                    self._restarts += 1
+                    if self._restarts > self.worker_max_restarts:
+                        # give up: dead-server mode (submits resolve to
+                        # errors immediately — still nobody hangs)
+                        self._worker_dead = True
+                        self.stats.g_worker_alive.set(0)
+                        self._cond.notify_all()
+                        log.error(
+                            "serve worker exceeded %d restarts; server is "
+                            "dead until restarted", self.worker_max_restarts)
+                        return
+                self.stats.bump("worker_restarts")
+                log.warning("restarting serve worker (attempt %d/%d) after "
+                            "%.2fs backoff", self._restarts,
+                            self.worker_max_restarts, backoff)
+                time.sleep(backoff)
+                backoff = min(backoff * 2.0, cap)
+
+    def _publish(self, results: List[Result]):
+        """Land finished results in the buffer and wake waiters."""
+        with self._cond:
+            for r in results:
+                self._done[r.request_id] = r
+            self._inflight = []
+            # evict oldest UNWAITED results beyond the cap — a result
+            # someone is blocked on must survive until they collect it
+            for rid in list(self._done):
+                if len(self._done) <= self._done_cap:
+                    break
+                if rid not in self._waiting:
+                    self._done.pop(rid)
+            self.stats.g_queue_depth.set(
+                sum(len(q) for q in self._queues.values()))
+            self.stats.g_last_flush.set(time.time())
+            self._cond.notify_all()
+
+    def _serve_loop(self):
+        while True:
+            faults.fire("serve.worker")        # chaos: worker crash
+            with self._cond:
+                plan, expired = self._drain_plan(
+                    ready_only=not self._stop_flag)
+                if not plan and not expired:
+                    if self._stop_flag:
+                        return
+                    # sleep until the oldest pending request would trip the
+                    # flush deadline, or the earliest per-request deadline
+                    # would expire (or a submit/stop notification)
+                    now = time.perf_counter()
                     oldest = min((q[0].t_submit
                                   for q in self._queues.values() if q),
                                  default=None)
-                    wait = None if oldest is None else max(
-                        self._deadline_s - (time.perf_counter() - oldest),
-                        1e-4)
+                    wakes = []
+                    if oldest is not None:
+                        wakes.append(self._deadline_s - (now - oldest))
+                    wakes.extend(r.deadline - now
+                                 for q in self._queues.values() for r in q
+                                 if r.deadline is not None)
+                    wait = max(min(wakes), 1e-4) if wakes else None
                     self._cond.wait(timeout=wait)
                     continue
+                # requests leave the queues here; until their results are
+                # published they are "in flight" — a crash between drain
+                # and publish resolves them via _fail_pending
+                self._inflight = [req for _, batch in plan for req in batch]
+            results = [self._timeout_result(n, req) for n, req in expired]
             # per-item errors become error Results inside _run_plan; the
             # outer except is a last resort so an infrastructural failure
             # still cannot kill the thread and hang every waiter
             try:
-                results = self._run_plan(plan, self.async_flush,
-                                         errors_as_results=True)
+                results += self._run_plan(plan, self.async_flush,
+                                          errors_as_results=True)
             except Exception as e:
-                results = [self._reject(req, n, f"serving error: {e!r}",
-                                        np.zeros((0, 3), np.float32), True)
-                           for n, batch in plan for req in batch]
-            with self._cond:
-                for r in results:
-                    self._done[r.request_id] = r
-                # evict oldest UNWAITED results beyond the cap — a result
-                # someone is blocked on must survive until they collect it
-                for rid in list(self._done):
-                    if len(self._done) <= self._done_cap:
-                        break
-                    if rid not in self._waiting:
-                        self._done.pop(rid)
-                self._cond.notify_all()
+                results += [self._reject(req, n, f"serving error: {e!r}",
+                                         np.zeros((0, 3), np.float32), True)
+                            for n, batch in plan for req in batch]
+            self._publish(results)
 
 
 def main():
@@ -1559,6 +1942,17 @@ def main():
     ap.add_argument("--profile", action="store_true",
                     help="additionally capture a full jax.profiler trace "
                     "under <trace-dir>/jax_profile")
+    ap.add_argument("--max-queue-depth", type=int, default=None,
+                    help="admission control: bound the pending queue; "
+                    "overflow is shed per --shed-policy (0 = unbounded)")
+    ap.add_argument("--shed-policy", default=None,
+                    choices=["reject", "block"],
+                    help="what to do with submits past --max-queue-depth: "
+                    "reject (immediate error Result) or block the producer")
+    ap.add_argument("--request-timeout", type=float, default=None,
+                    help="per-request deadline in seconds; requests that "
+                    "wait longer are dropped before any device work and "
+                    "resolve to an error Result (0 = no deadline)")
     args = ap.parse_args()
 
     cfg = GNNConfig()
@@ -1575,6 +1969,12 @@ def main():
         cfg = cfg.replace(bucket_refit_every=args.refit_every)
     if args.compile_cache:
         cfg = cfg.replace(compile_cache_dir=args.compile_cache)
+    if args.max_queue_depth is not None:
+        cfg = cfg.replace(max_queue_depth=args.max_queue_depth)
+    if args.shed_policy is not None:
+        cfg = cfg.replace(shed_policy=args.shed_policy)
+    if args.request_timeout is not None:
+        cfg = cfg.replace(request_timeout_s=args.request_timeout)
     auto = args.buckets.strip().lower() == "auto"
     buckets = "auto" if auto else \
         tuple(int(b) for b in args.buckets.split(","))

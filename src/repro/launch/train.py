@@ -44,6 +44,7 @@ from repro.launch.sharding import mesh_for_shards, shard_count_for, shard_put
 from repro.models import meshgraphnet as mgn
 from repro.models import registry
 from repro.optim.adam import AdamConfig, AdamState, adam_init, adam_update
+from repro.resilience import faults
 from repro.telemetry import Telemetry, default_latency_buckets
 
 # training-loop stages whose wall time lands in the metrics registry as
@@ -73,11 +74,40 @@ def make_gnn_step_fn(cfg: GNNConfig, opt_cfg: AdamConfig, mesh=None,
     every device.
 
     Returns ``step(params, opt, stacked, denom) -> (params, opt, loss,
-    grad_norm)``. On the sharded path ``stacked`` must carry a ``"denom"``
-    leaf of shape (P,) (see :func:`prepare_gnn_batch`) and the ``denom``
-    argument is ignored — a traced scalar cannot cross into ``shard_map``
-    as a closure without re-tracing per sample.
+    grad_norm, skipped)``. On the sharded path ``stacked`` must carry a
+    ``"denom"`` leaf of shape (P,) (see :func:`prepare_gnn_batch`) and the
+    ``denom`` argument is ignored — a traced scalar cannot cross into
+    ``shard_map`` as a closure without re-tracing per sample.
+
+    Nonfinite guard (``cfg.nonfinite_guard``, default on): when the loss
+    or any gradient leaf is NaN/Inf the optimizer update is SKIPPED — the
+    returned params and Adam state are the inputs, bit for bit, and
+    ``skipped`` is True. One poisoned batch costs one step instead of the
+    whole run. On a finite step the guard is an exact-select no-op: the
+    updated values pass through unchanged (the bitwise single-device
+    equivalence in ``tests/test_train_equivalence.py`` still holds).
     """
+    guard = bool(getattr(cfg, "nonfinite_guard", True))
+
+    def guarded_update(loss, grads, opt, params):
+        new_params, new_opt, metrics = adam_update(opt_cfg, grads, opt,
+                                                   params)
+        if not guard:
+            return (new_params, new_opt, loss, metrics["grad_norm"],
+                    jnp.asarray(False))
+        finite = jnp.isfinite(loss) & jax.tree_util.tree_reduce(
+            jnp.logical_and,
+            jax.tree_util.tree_map(
+                lambda g: jnp.all(jnp.isfinite(g)), grads),
+            jnp.asarray(True))
+
+        def keep(new, old):
+            return jnp.where(finite, new, old)
+
+        params = jax.tree_util.tree_map(keep, new_params, params)
+        opt = jax.tree_util.tree_map(keep, new_opt, opt)
+        return params, opt, loss, metrics["grad_norm"], ~finite
+
     if mesh is None:
         @jax.jit
         def step_fn(params, opt, stacked, denom):
@@ -85,8 +115,7 @@ def make_gnn_step_fn(cfg: GNNConfig, opt_cfg: AdamConfig, mesh=None,
                 return jax.value_and_grad(
                     lambda q: mgn.loss_fn(q, cfg, b, denom=denom))(p)
             loss, grads = scan_aggregate_gradients(grad_fn, params, stacked)
-            params, opt, metrics = adam_update(opt_cfg, grads, opt, params)
-            return params, opt, loss, metrics["grad_norm"]
+            return guarded_update(loss, grads, opt, params)
         return step_fn
 
     grad_call = dmgn.make_xmgn_ddp_grad_fn(mesh, cfg, denom=None,
@@ -95,8 +124,7 @@ def make_gnn_step_fn(cfg: GNNConfig, opt_cfg: AdamConfig, mesh=None,
     @jax.jit
     def step_fn(params, opt, stacked, denom):
         loss, grads = grad_call(params, stacked)
-        params, opt, metrics = adam_update(opt_cfg, grads, opt, params)
-        return params, opt, loss, metrics["grad_norm"]
+        return guarded_update(loss, grads, opt, params)
     return step_fn
 
 
@@ -126,7 +154,8 @@ def train_gnn(cfg: GNNConfig, steps: int, n_samples: int,
               shard_devices: Optional[int] = None,
               telemetry: Optional[Telemetry] = None,
               ckpt_every: int = 0, resume: str | None = None,
-              opt_total_steps: Optional[int] = None):
+              opt_total_steps: Optional[int] = None,
+              keep_ckpts: Optional[int] = None):
     """Train X-MeshGraphNet on partitioned synthetic DrivAerML-proxy data.
 
     ``shard_devices`` caps the partition-parallel width (``None`` = use as
@@ -184,10 +213,18 @@ def train_gnn(cfg: GNNConfig, steps: int, n_samples: int,
     start_step = 0
     restored = None
     if resume:
-        restored = ckpt.restore(resume)
+        # retention-aware restore: a corrupt newest checkpoint (crash mid
+        # write, disk damage) falls back to the previous intact one from
+        # the --keep-ckpts window instead of killing the resume
+        restored, used_path, skipped_paths = ckpt.restore_with_fallback(
+            resume)
+        for p in skipped_paths:
+            print(f"WARNING: skipped corrupt checkpoint {p}", flush=True)
+        if used_path != resume:
+            print(f"resuming from retained fallback {used_path}", flush=True)
         if "params" not in restored:
             raise ckpt.CheckpointError(
-                f"{resume!r} is not a training checkpoint (no 'params')")
+                f"{used_path!r} is not a training checkpoint (no 'params')")
         params = restored["params"]
     if opt_total_steps is None:
         # a resumed run keeps the original cosine horizon so the LR
@@ -219,6 +256,12 @@ def train_gnn(cfg: GNNConfig, steps: int, n_samples: int,
               "device, one grad psum per step)", flush=True)
     step_fn = make_gnn_step_fn(cfg, opt_cfg, mesh=mesh)
 
+    if keep_ckpts is None:
+        keep_ckpts = int(getattr(cfg, "keep_ckpts", 0))
+    skip_ctr = tel.metrics.counter(
+        "train_nonfinite_steps_total",
+        help="optimizer steps skipped on a nonfinite loss/grad")
+    nonfinite_steps = 0
     losses = []
     t_first = 0.0
     t_warm = 0.0
@@ -234,12 +277,28 @@ def train_gnn(cfg: GNNConfig, steps: int, n_samples: int,
             with tel.span("prepare"):
                 stacked, denom = prepare_gnn_batch(
                     psamples[it % len(psamples)], mesh)
+                if faults.active():
+                    # chaos: poison this step's node features so the
+                    # nonfinite skip-step guard has something to catch
+                    nf = np.asarray(stacked["node_feats"])
+                    bad = faults.corrupt("train.batch", nf)
+                    if bad is not nf:     # corrupt returns arr iff unfired
+                        stacked = dict(stacked)
+                        stacked["node_feats"] = jnp.asarray(bad)
             tp1 = time.perf_counter()
             first = it == start_step
             with tel.annotate(f"train/step{'_first' if first else ''}"):
-                params, opt, loss, gnorm = step_fn(params, opt, stacked,
-                                                   denom)
+                params, opt, loss, gnorm, skipped = step_fn(
+                    params, opt, stacked, denom)
                 losses.append(float(loss))  # blocks until the step finishes
+            if bool(skipped):
+                nonfinite_steps += 1
+                skip_ctr.inc()
+                tel.tracer.record_span("nonfinite_skip", tp1,
+                                       time.perf_counter(), it=it)
+                print(f"step {it:5d} SKIPPED: nonfinite loss/grads "
+                      f"(loss {float(loss)}, {nonfinite_steps} skipped so "
+                      "far) — params and Adam state unchanged", flush=True)
         hists["prepare"].observe(tp1 - tp0)
         hists["step"].observe(time.perf_counter() - tp1)
         loss_gauge.set(float(loss))
@@ -247,9 +306,19 @@ def train_gnn(cfg: GNNConfig, steps: int, n_samples: int,
         if (ckpt_path and ckpt_every > 0 and (it + 1) % ckpt_every == 0
                 and it + 1 < steps):
             # async: snapshot to host, write on the ckpt-writer thread —
-            # the loop only ever waits for the PREVIOUS write
+            # the loop only ever waits for the PREVIOUS write. With
+            # keep_ckpts > 0 periodic saves go to step-tagged siblings
+            # (<path>.stepNNNNNNNN) and the window is pruned — a corrupt
+            # newest file leaves an intact fallback for --resume.
             with tel.span("checkpoint", path=ckpt_path, it=it):
-                writer.save(ckpt_path, ckpt_tree(params, opt, it + 1))
+                if keep_ckpts > 0:
+                    writer.save(ckpt.retained_path(ckpt_path, it + 1),
+                                ckpt_tree(params, opt, it + 1))
+                    # the in-flight write is not on disk yet; prunable
+                    # files are all from completed earlier saves
+                    ckpt.prune_retained(ckpt_path, keep_ckpts)
+                else:
+                    writer.save(ckpt_path, ckpt_tree(params, opt, it + 1))
         dt = time.time() - t0
         if it == start_step:
             t_first = dt                   # compile + first execution
@@ -379,6 +448,10 @@ def main():
     ap.add_argument("--ckpt-every", type=int, default=0,
                     help="also write --ckpt every N steps (async, on a "
                     "background thread), not just after the final step")
+    ap.add_argument("--keep-ckpts", type=int, default=None,
+                    help="retain the K newest periodic checkpoints as "
+                    "step-tagged siblings of --ckpt; --resume falls back "
+                    "past a corrupt newest file to the previous intact one")
     ap.add_argument("--resume", default=None,
                     help="continue training from this checkpoint: params, "
                     "Adam state, step and LR-schedule horizon are restored "
@@ -425,7 +498,8 @@ def main():
                 graph_source=args.graph_source,
                 shard_devices=args.shard_devices, telemetry=tel,
                 ckpt_every=args.ckpt_every, resume=args.resume,
-                opt_total_steps=args.total_steps)
+                opt_total_steps=args.total_steps,
+                keep_ckpts=args.keep_ckpts)
             with tel.span("eval", n_samples=len(test)):
                 t0 = time.perf_counter()
                 metrics = eval_gnn(cfg, params, test, ni, no)

@@ -1,0 +1,11 @@
+"""Resilience layer: deterministic fault injection for chaos testing.
+
+The serving and training hot paths are threaded with named injection
+sites (see :mod:`repro.resilience.faults`); chaos tests arm them to
+prove the stack degrades — error Results, quarantined buckets, skipped
+steps, checkpoint fallback — instead of dying.
+"""
+from repro.resilience.faults import (FAULTS, FaultError, FaultInjector,
+                                     FaultSpec, SITES)
+
+__all__ = ["FAULTS", "FaultError", "FaultInjector", "FaultSpec", "SITES"]

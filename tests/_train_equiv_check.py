@@ -131,7 +131,7 @@ def main():
         p, o, ls = params, adam_init(params), []
         for it in range(TRAJ_STEPS):
             st, dn = bs[it % len(bs)]
-            p, o, l, _ = step(p, o, st, dn)
+            p, o, l, _, _ = step(p, o, st, dn)
             ls.append(float(l))
         return p, ls
 

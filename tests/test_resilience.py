@@ -1,0 +1,573 @@
+"""Chaos suite for the resilience layer (repro.resilience + serving/training
+hardening).
+
+Invariants under injected faults:
+
+* no ``result()`` waiter ever hangs past its timeout;
+* every submitted request terminates in exactly one ``Result``;
+* the server keeps serving after a worker crash, a compile failure, or a
+  NaN-producing device call;
+* post-fault outputs for untouched requests match a fault-free run.
+"""
+import os
+import threading
+import time
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.ckpt import checkpoint as ckpt
+from repro.ckpt.checkpoint import CheckpointError
+from repro.configs.base import GNNConfig
+from repro.data import geometry as geo
+from repro.launch.serve_gnn import GNNServer
+from repro.resilience import FAULTS, FaultError
+
+
+@pytest.fixture(autouse=True)
+def _clean_faults():
+    FAULTS.reset()
+    yield
+    FAULTS.reset()
+
+
+def _cfg():
+    return GNNConfig().reduced().replace(levels=(64, 128, 256))
+
+
+def _geom(i=0):
+    return geo.car_surface(geo.sample_params(i))
+
+
+# ---------------------------------------------------------------------------
+# fault injector
+# ---------------------------------------------------------------------------
+
+def test_fault_nth_times_window():
+    FAULTS.arm("serve.dispatch", mode="raise", nth=2, times=2)
+    FAULTS.fire("serve.dispatch")                     # hit 1: before window
+    for _ in range(2):                                # hits 2, 3: fire
+        with pytest.raises(FaultError, match="serve.dispatch"):
+            FAULTS.fire("serve.dispatch")
+    FAULTS.fire("serve.dispatch")                     # hit 4: past window
+    assert FAULTS.hits("serve.dispatch") == 4
+    assert FAULTS.fired("serve.dispatch") == 2
+
+
+def test_fault_forever_and_unarmed_sites():
+    FAULTS.arm("serve.worker", nth=1, times=-1)
+    for _ in range(5):
+        with pytest.raises(FaultError):
+            FAULTS.fire("serve.worker")
+    FAULTS.fire("serve.dispatch")                     # other sites untouched
+    FAULTS.disarm("serve.worker")
+    FAULTS.fire("serve.worker")
+    assert not FAULTS.active()
+
+
+def test_fault_custom_exception_and_delay():
+    FAULTS.arm("serve.compile", exc=lambda site: MemoryError(site))
+    with pytest.raises(MemoryError):
+        FAULTS.fire("serve.compile")
+    FAULTS.arm("serve.dispatch", mode="delay", delay_s=0.05, times=1)
+    t0 = time.perf_counter()
+    FAULTS.fire("serve.dispatch")
+    assert time.perf_counter() - t0 >= 0.04
+
+
+def test_fault_armed_context_manager():
+    with FAULTS.armed("bucket.build"):
+        assert FAULTS.active()
+        with pytest.raises(FaultError):
+            FAULTS.fire("bucket.build")
+    assert not FAULTS.active()
+    FAULTS.fire("bucket.build")
+
+
+def test_corrupt_identity_when_not_firing():
+    a = np.ones((4, 3), np.float32)
+    assert FAULTS.corrupt("serve.harvest", a) is a    # unarmed: same object
+    FAULTS.arm("serve.harvest", mode="corrupt", nth=2)
+    assert FAULTS.corrupt("serve.harvest", a) is a    # hit 1: not yet
+    out = FAULTS.corrupt("serve.harvest", a)          # hit 2: NaN copy
+    assert out is not a
+    assert np.isnan(out).all()
+    assert np.isfinite(a).all()                       # input untouched
+
+
+def test_corrupt_partial_mask_deterministic():
+    a = np.zeros((64, 8), np.float32)
+    masks = []
+    for _ in range(2):
+        FAULTS.arm("serve.harvest", mode="corrupt", frac=0.25, seed=3)
+        masks.append(np.isnan(FAULTS.corrupt("serve.harvest", a)))
+        FAULTS.reset()
+    np.testing.assert_array_equal(masks[0], masks[1])  # bit-reproducible
+    frac = masks[0].mean()
+    assert 0.0 < frac < 1.0                            # genuinely partial
+
+
+def test_fault_thread_safety_exact_fire_count():
+    FAULTS.arm("ckpt.write", nth=10, times=3)
+    errs = []
+
+    def hammer():
+        for _ in range(10):
+            try:
+                FAULTS.fire("ckpt.write")
+            except FaultError:
+                errs.append(1)
+
+    threads = [threading.Thread(target=hammer) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert FAULTS.hits("ckpt.write") == 80
+    assert len(errs) == 3 and FAULTS.fired("ckpt.write") == 3
+
+
+def test_arm_rejects_unknown_mode():
+    with pytest.raises(ValueError, match="mode"):
+        FAULTS.arm("serve.dispatch", mode="explode")
+
+
+# ---------------------------------------------------------------------------
+# deadlines / admission control
+# ---------------------------------------------------------------------------
+
+def test_request_deadline_expires_before_device_work():
+    server = GNNServer(_cfg(), (128,), max_batch=2, seed=0)
+    verts, faces = _geom()
+    rid = server.submit(verts, faces, 128, timeout_s=0.01)
+    time.sleep(0.05)
+    fresh = server.submit(verts, faces, 128)          # no deadline
+    results = {r.request_id: r for r in server.flush()}
+    assert results[rid].error is not None
+    assert "deadline exceeded" in results[rid].error
+    assert results[rid].batch_size == 0
+    assert results[fresh].error is None
+    assert np.isfinite(results[fresh].fields).all()
+    assert server.stats.timed_out_requests == 1
+    assert server.stats.report()["timed_out_requests"] == 1
+
+
+def test_server_level_default_timeout():
+    server = GNNServer(_cfg(), (128,), max_batch=2, request_timeout_s=0.01)
+    verts, faces = _geom()
+    rid = server.submit(verts, faces, 128)            # inherits cfg deadline
+    time.sleep(0.05)
+    [res] = server.flush()
+    assert res.request_id == rid and "deadline exceeded" in res.error
+
+
+def test_background_worker_wakes_for_request_deadline():
+    """A lone sub-max_batch request with a short per-request deadline is
+    resolved as timed out even though the flush deadline is far away."""
+    server = GNNServer(_cfg(), (128,), max_batch=4, seed=0)
+    server.warmup()
+    server.start(deadline_s=30.0)                     # flush never triggers
+    verts, faces = _geom()
+    try:
+        rid = server.submit(verts, faces, 128, timeout_s=0.05)
+        t0 = time.perf_counter()
+        res = server.result(rid, timeout=10.0)
+        assert time.perf_counter() - t0 < 5.0         # woke for the deadline
+        assert res.error is not None and "deadline exceeded" in res.error
+    finally:
+        server.stop()
+
+
+def test_admission_control_reject_sheds_overflow():
+    server = GNNServer(_cfg(), (128,), max_batch=2, max_queue_depth=2,
+                       shed_policy="reject", seed=0)
+    verts, faces = _geom()
+    results = server.serve([(verts, faces, 128)] * 4)
+    assert len(results) == 4                          # every rid resolves
+    errs = [r for r in results if r.error is not None]
+    ok = [r for r in results if r.error is None]
+    assert len(errs) == 2 and len(ok) == 2
+    assert all("queue full" in r.error for r in errs)
+    assert server.stats.rejected_overload == 2
+    assert server.stats._counters["rejected_overload"].value == 2
+
+
+def test_admission_control_block_backpressures():
+    """shed_policy='block' producers wait for queue space instead of being
+    shed: every submit is eventually served, none rejected."""
+    server = GNNServer(_cfg(), (128,), max_batch=1, max_queue_depth=1,
+                       shed_policy="block", seed=0)
+    server.warmup()
+    server.start(deadline_s=0.001)
+    verts, faces = _geom()
+    try:
+        rids = [server.submit(verts, faces, 128) for _ in range(3)]
+        out = [server.result(r, timeout=60.0) for r in rids]
+    finally:
+        server.stop()
+    assert all(r.error is None for r in out)
+    assert server.stats.rejected_overload == 0
+
+
+def test_invalid_shed_policy_rejected():
+    with pytest.raises(ValueError, match="shed_policy"):
+        GNNServer(_cfg(), (128,), shed_policy="drop-everything")
+
+
+# ---------------------------------------------------------------------------
+# worker supervision
+# ---------------------------------------------------------------------------
+
+def test_worker_crash_fails_pending_then_restarts():
+    server = GNNServer(_cfg(), (128,), max_batch=1, seed=0)
+    server.warmup()
+    verts, faces = _geom()
+    doomed = server.submit(verts, faces, 128)         # queued before start
+    FAULTS.arm("serve.worker", nth=1, times=1)        # first iteration dies
+    server.start(deadline_s=0.005)
+    try:
+        res = server.result(doomed, timeout=30.0)     # waiter does NOT hang
+        assert res.error is not None and "worker crashed" in res.error
+        good = server.submit(verts, faces, 128)       # restarted worker
+        ok = server.result(good, timeout=60.0)
+        assert ok.error is None and np.isfinite(ok.fields).all()
+    finally:
+        server.stop()
+    assert server.stats.worker_crashes == 1
+    assert server.stats.worker_restarts == 1
+    rep = server.stats.report()
+    assert rep["worker_crashes"] == 1 and rep["worker_restarts"] == 1
+    assert server.stats._counters["worker_crashes"].value == 1
+
+
+def test_worker_dead_past_restart_budget_never_hangs_submits():
+    server = GNNServer(_cfg(), (128,), max_batch=1, worker_max_restarts=0,
+                       seed=0)
+    FAULTS.arm("serve.worker", nth=1, times=-1)       # crash every iteration
+    server.start(deadline_s=0.005)
+    try:
+        deadline = time.perf_counter() + 10.0
+        while (not server.health()["worker_dead"]
+               and time.perf_counter() < deadline):
+            time.sleep(0.01)
+        assert server.health()["worker_dead"]
+        verts, faces = _geom()
+        rid = server.submit(verts, faces, 128)        # resolves immediately
+        res = server.result(rid, timeout=5.0)
+        assert res.error is not None and "dead" in res.error
+    finally:
+        server.stop()
+    assert server.stats.worker_crashes == 1
+    assert server.stats.worker_restarts == 0
+
+
+def test_graceful_stop_serves_pending_waiter():
+    """stop() drains the queue: a result() waiter blocked on an unflushed
+    request gets a SERVED result, not an error."""
+    server = GNNServer(_cfg(), (128,), max_batch=4, seed=0)
+    server.warmup()
+    server.start(deadline_s=30.0)                     # nothing auto-flushes
+    verts, faces = _geom()
+    rid = server.submit(verts, faces, 128)
+    got = {}
+
+    def wait():
+        got["res"] = server.result(rid, timeout=60.0)
+
+    t = threading.Thread(target=wait)
+    t.start()
+    time.sleep(0.05)
+    server.stop()
+    t.join(timeout=60.0)
+    assert not t.is_alive()
+    assert got["res"].error is None
+    assert np.isfinite(got["res"].fields).all()
+
+
+def test_health_snapshot():
+    server = GNNServer(_cfg(), (128,), max_batch=1, seed=0)
+    h = server.health()
+    assert h["worker_alive"] is False and h["queue_depth"] == 0
+    server.start(deadline_s=0.005)
+    try:
+        assert server.health()["worker_alive"] is True
+        assert float(server.stats.g_worker_alive.value) == 1.0
+    finally:
+        server.stop()
+    h = server.health()
+    assert h["worker_alive"] is False and not h["worker_dead"]
+    assert float(server.stats.g_worker_alive.value) == 0.0
+    for key in ("worker_crashes", "quarantined_buckets", "nonfinite_results",
+                "timed_out_requests", "rejected_overload"):
+        assert h[key] == 0
+
+
+# ---------------------------------------------------------------------------
+# compile failure -> quarantine + fallback
+# ---------------------------------------------------------------------------
+
+def test_compile_failure_falls_back_to_larger_bucket():
+    verts, faces = _geom(3)
+    want_server = GNNServer(_cfg(), (256,), max_batch=2, seed=7)
+    [want] = want_server.serve([(verts, faces, 100)])
+
+    server = GNNServer(_cfg(), (128, 256), max_batch=2, seed=7)
+    FAULTS.arm("serve.compile", nth=1, times=1)       # 128's program dies
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        [got] = server.serve([(verts, faces, 100)])
+    assert got.error is None
+    assert got.bucket == 256                          # served by the fallback
+    assert server.stats.quarantined_buckets == 1
+    assert server.stats.bucket_fallbacks == 1
+    assert sorted(server._quarantined) == [128]
+    # identical output to a server that had only the fallback bucket:
+    # (seed, rid)-keyed sampling makes the degraded path exactly equivalent
+    np.testing.assert_allclose(got.fields, want.fields, rtol=1e-5, atol=1e-5)
+
+    # later traffic routes straight to the live bucket — no more fallbacks
+    [again] = server.serve([(verts, faces, 100)])
+    assert again.bucket == 256 and again.error is None
+    assert server.stats.bucket_fallbacks == 1
+
+
+def test_no_fallback_available_surfaces_error_then_quarantined_route():
+    server = GNNServer(_cfg(), (128,), max_batch=1, seed=0)
+    verts, faces = _geom()
+    FAULTS.arm("serve.compile", nth=1, times=-1)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        with pytest.raises(FaultError):
+            server.serve([(verts, faces, 100)])
+        with pytest.raises(RuntimeError, match="quarantined"):
+            server.submit(verts, faces, 100)
+
+
+# ---------------------------------------------------------------------------
+# nonfinite harvest guard
+# ---------------------------------------------------------------------------
+
+def test_nan_harvest_contained_to_its_batch():
+    """Corrupted device output errors its OWN batch; the next batch in the
+    same flush is served and matches a fault-free run."""
+    verts, faces = _geom(1)
+    reqs = [(verts, faces, 128)] * 3                  # batches of 2 + 1
+    clean = GNNServer(_cfg(), (128,), max_batch=2, seed=7)
+    want = {r.request_id: r for r in clean.serve(reqs)}
+
+    server = GNNServer(_cfg(), (128,), max_batch=2, seed=7)
+    FAULTS.arm("serve.harvest", mode="corrupt", nth=1, times=1)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        got = {r.request_id: r for r in server.serve(reqs)}
+    assert len(got) == 3
+    for rid in (0, 1):                                # first batch poisoned
+        assert got[rid].error is not None
+        assert "nonfinite output" in got[rid].error
+        assert np.isnan(got[rid].fields).all()
+    assert got[2].error is None
+    np.testing.assert_allclose(got[2].fields, want[2].fields,
+                               rtol=1e-5, atol=1e-5)
+    assert server.stats.nonfinite_results == 2
+    assert server.stats.report()["nonfinite_results"] == 2
+
+
+def test_nan_guard_disabled_passes_garbage_through():
+    server = GNNServer(_cfg().replace(nonfinite_guard=False), (128,),
+                       max_batch=1, seed=0)
+    verts, faces = _geom()
+    FAULTS.arm("serve.harvest", mode="corrupt", nth=1, times=1)
+    [res] = server.serve([(verts, faces, 128)])
+    assert res.error is None and np.isnan(res.fields).all()
+    assert server.stats.nonfinite_results == 0
+
+
+def test_background_worker_survives_nan_output():
+    server = GNNServer(_cfg(), (128,), max_batch=1, seed=0)
+    server.warmup()
+    server.start(deadline_s=0.005)
+    verts, faces = _geom()
+    FAULTS.arm("serve.harvest", mode="corrupt", nth=1, times=1)
+    try:
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            bad = server.submit(verts, faces, 128)
+            res = server.result(bad, timeout=60.0)
+            assert res.error is not None and "nonfinite" in res.error
+            good = server.submit(verts, faces, 128)
+            ok = server.result(good, timeout=60.0)
+    finally:
+        server.stop()
+    assert ok.error is None and np.isfinite(ok.fields).all()
+
+
+# ---------------------------------------------------------------------------
+# chaos hammer: exactly one Result per request, nobody hangs
+# ---------------------------------------------------------------------------
+
+def test_chaos_every_request_terminates_exactly_once():
+    server = GNNServer(_cfg(), (128,), max_batch=2, seed=0)
+    server.warmup()
+    verts, faces = _geom()
+    FAULTS.arm("serve.harvest", mode="corrupt", nth=1, times=1)
+    FAULTS.arm("serve.worker", nth=3, times=1)        # one mid-stream crash
+    rids = [server.submit(verts, faces, 128) for _ in range(4)]
+    server.start(deadline_s=0.005)
+    out = {}
+    try:
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            rids += [server.submit(verts, faces, 128) for _ in range(4)]
+            for rid in rids:
+                out[rid] = server.result(rid, timeout=60.0)
+    finally:
+        server.stop()
+    assert sorted(out) == sorted(rids) == list(range(8))
+    for rid, res in out.items():
+        assert res.request_id == rid
+        assert (res.error is not None) or np.isfinite(res.fields).all()
+    served = [r for r in out.values() if r.error is None]
+    assert served                                      # kept serving after it
+
+
+# ---------------------------------------------------------------------------
+# checkpoint write faults + retention fallback
+# ---------------------------------------------------------------------------
+
+def _tree(x):
+    return {"params": {"w": np.full((3, 4), float(x), np.float32)},
+            "step": int(x)}
+
+
+def test_ckpt_write_fault_leaves_target_intact(tmp_path):
+    p = str(tmp_path / "ck.msgpack")
+    ckpt.save(p, _tree(1))
+    raw = open(p, "rb").read()
+    for site in ("ckpt.write", "ckpt.rename"):
+        FAULTS.arm(site, nth=1, times=1)
+        with pytest.raises(FaultError):
+            ckpt.save(p, _tree(2))
+        assert open(p, "rb").read() == raw            # old bytes untouched
+        assert os.listdir(tmp_path) == ["ck.msgpack"]  # no tmp leftovers
+    ckpt.save(p, _tree(2))                            # disarmed: works again
+    assert ckpt.restore(p)["step"] == 2
+
+
+def test_retention_prune_keeps_newest_k(tmp_path):
+    p = str(tmp_path / "ck.msgpack")
+    for step in range(1, 6):
+        written = ckpt.save_retained(p, _tree(step), step, keep=3)
+        assert written == ckpt.retained_path(p, step)
+    steps = [s for s, _ in ckpt.retained_steps(p)]
+    assert steps == [3, 4, 5]
+    assert ckpt.prune_retained(p, keep=0) == []       # 0 = keep everything
+
+
+def test_restore_with_fallback_skips_corrupt_newest(tmp_path):
+    p = str(tmp_path / "ck.msgpack")
+    for i, step in enumerate((1, 2, 3)):
+        sib = ckpt.retained_path(p, step)
+        ckpt.save(sib, _tree(step))
+        os.utime(sib, (1000 + i, 1000 + i))           # deterministic mtimes
+    ckpt.save(p, _tree(4))
+    os.utime(p, (1010, 1010))                         # final file is newest
+    # intact final path wins outright
+    tree, used, skipped = ckpt.restore_with_fallback(p)
+    assert used == p and tree["step"] == 4 and skipped == []
+    # truncate the final path -> newest retained sibling, bit for bit
+    raw = open(ckpt.retained_path(p, 3), "rb").read()
+    with open(p, "wb") as f:
+        f.write(open(p, "rb").read()[:10])
+    tree, used, skipped = ckpt.restore_with_fallback(p)
+    assert used == ckpt.retained_path(p, 3)
+    assert skipped == [p]
+    assert open(used, "rb").read() == raw
+    np.testing.assert_array_equal(tree["params"]["w"],
+                                  np.full((3, 4), 3.0, np.float32))
+    # corrupt that sibling too -> next one back
+    with open(ckpt.retained_path(p, 3), "wb") as f:
+        f.write(b"\x81")
+    tree, used, skipped = ckpt.restore_with_fallback(p)
+    assert used == ckpt.retained_path(p, 2) and len(skipped) == 2
+    assert tree["step"] == 2
+
+
+def test_restore_with_fallback_every_candidate_dead(tmp_path):
+    p = str(tmp_path / "ck.msgpack")
+    with pytest.raises(CheckpointError, match="no checkpoint"):
+        ckpt.restore_with_fallback(p)
+    with open(p, "wb") as f:
+        f.write(b"\x81")
+    with pytest.raises(CheckpointError, match="corrupt"):
+        ckpt.restore_with_fallback(p)
+
+
+# ---------------------------------------------------------------------------
+# training: retention fallback on resume + nonfinite skip-step
+# ---------------------------------------------------------------------------
+
+def _tiny_cfg():
+    return GNNConfig().reduced().replace(levels=(32, 64), n_partitions=2,
+                                         hidden=16, n_mp_layers=2, halo=2)
+
+
+def _max_diff(a, b):
+    import jax
+    leaves_a = jax.tree_util.tree_leaves(a)
+    leaves_b = jax.tree_util.tree_leaves(b)
+    return max(float(np.max(np.abs(np.asarray(x) - np.asarray(y))))
+               for x, y in zip(leaves_a, leaves_b))
+
+
+def test_train_resume_falls_back_past_corrupt_checkpoint(tmp_path, capsys):
+    from repro.launch.train import train_gnn
+    cfg = _tiny_cfg()
+    p = str(tmp_path / "ck.msgpack")
+    p_full, losses_full, _ = train_gnn(cfg, steps=4, n_samples=2,
+                                       ckpt_path=p, ckpt_every=1,
+                                       keep_ckpts=3, log_every=100)
+    # periodic saves went to step-tagged siblings, window pruned to 3
+    assert [s for s, _ in ckpt.retained_steps(p)] == [1, 2, 3]
+    # corrupt the FINAL checkpoint (newest): resume must fall back to the
+    # step-3 sibling and finish with the exact same params as the full run
+    raw = open(p, "rb").read()
+    with open(p, "wb") as f:
+        f.write(raw[:len(raw) // 2])
+    capsys.readouterr()
+    p_res, losses_tail, _ = train_gnn(cfg, steps=4, n_samples=2,
+                                      resume=p, log_every=100)
+    out = capsys.readouterr().out
+    assert "skipped corrupt checkpoint" in out and p in out
+    assert "retained fallback" in out
+    assert np.allclose(losses_tail, losses_full[3:], atol=1e-6)
+    assert _max_diff(p_full, p_res) <= 1e-5
+
+
+def test_train_skips_step_on_nonfinite_batch(capsys):
+    from repro.launch.train import train_gnn
+    FAULTS.arm("train.batch", mode="corrupt", nth=2, times=1)
+    _, losses, _ = train_gnn(_tiny_cfg(), steps=3, n_samples=2,
+                             log_every=100)
+    out = capsys.readouterr().out
+    assert len(losses) == 3
+    assert np.isfinite(losses[0])
+    assert not np.isfinite(losses[1])                 # the poisoned step
+    assert np.isfinite(losses[2])                     # training recovered
+    assert "SKIPPED: nonfinite" in out
+
+
+def test_train_guard_is_bitwise_noop_when_finite():
+    """nonfinite_guard on vs off: identical params on an all-finite run —
+    the where-select must be exact, not approximately equal."""
+    from repro.launch.train import train_gnn
+    p_on, l_on, _ = train_gnn(_tiny_cfg(), steps=2, n_samples=2,
+                              log_every=100)
+    p_off, l_off, _ = train_gnn(
+        _tiny_cfg().replace(nonfinite_guard=False), steps=2, n_samples=2,
+        log_every=100)
+    assert l_on == l_off
+    import jax
+    for a, b in zip(jax.tree_util.tree_leaves(p_on),
+                    jax.tree_util.tree_leaves(p_off)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -92,7 +92,7 @@ def test_single_device_step_matches_seed_trainer_bitwise():
         stacked = jax.tree_util.tree_map(jnp.asarray, ps.stacked)
         denom = jnp.asarray(ps.denom)
         p_a, o_a, l_a, g_a = seed_step(p_a, o_a, stacked, denom)
-        p_b, o_b, l_b, g_b = new_step(p_b, o_b, stacked, denom)
+        p_b, o_b, l_b, g_b, _ = new_step(p_b, o_b, stacked, denom)
         assert float(l_a) == float(l_b) and float(g_a) == float(g_b)
     for x, y in zip(jax.tree_util.tree_leaves(p_a),
                     jax.tree_util.tree_leaves(p_b)):
