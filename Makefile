@@ -2,7 +2,7 @@ PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
 .PHONY: verify test bench-graph bench-serve bench-train bench-coldstart \
-	smoke trace chaos
+	sharded-autoscale smoke trace chaos
 
 # tier-1 gate: full test suite + graph-build perf smoke
 verify: test bench-graph
@@ -23,6 +23,16 @@ bench-serve:
 bench-coldstart:
 	cd benchmarks && PYTHONPATH=../src $(PY) bench_serve.py --smoke \
 		--compile-cache /tmp/xmgn-xla-cache --json /tmp/bench_serve.json
+
+# elastic sharded serving: the multi-device acceptance suite (auto ladder
+# equivalence, evict->rebuild, packing isolation, shard.plan chaos,
+# sharded artifact) plus the sharded autoscale bench (padding waste +
+# warm p95 under shard_map); see README "Sharded serving"
+sharded-autoscale:
+	$(PY) tests/_sharded_auto_check.py
+	cd benchmarks && PYTHONPATH=../src $(PY) bench_serve.py --smoke \
+		--only sharded_autoscale --shard-devices 2 \
+		--json /tmp/bench_sharded.json
 
 # training step: single-device scan vs shard_map partition-parallel
 bench-train:

@@ -21,6 +21,14 @@ Measures the two serving-performance levers this repo ships:
           (adaptation, on-demand compiles — the p99 during ladder growth)
           and warm passes, plus the compiled-program cache counters.
           Asserts auto is no worse than static on padding waste.
+  sharded_autoscale
+          the same nonstationary stream served under shard_map with
+          ``--shard-devices`` shards per program (bucketized ShardSpecs,
+          per-bucket halo calibration, cross-request packing). Runs in a
+          subprocess with ``XLA_FLAGS=--xla_force_host_platform_device_
+          count=N`` (device count locks at first jax init). Records
+          padding waste — which now includes replayed pack lanes — and
+          warm p50/p95 per ladder; asserts auto <= static waste.
   coldstart
           process-restart latency (``time_to_first_result_s`` = server
           construction/restore + first served request, measured in a fresh
@@ -162,18 +170,11 @@ def bench_agg_impls(cfg, reqs, bucket, max_batch, reference, impls, rows,
             assert diff < 1e-4, f"agg_impl={impl} diverged from xla: {diff}"
 
 
-def bench_autoscale(cfg, reference, max_batch, smoke, rows, report):
-    """Nonstationary request-size traffic: autoscaling vs static ladder.
-
-    Two traffic phases — small-resolution requests, then a shift to large
-    ones (the regime an operator must provision a static ladder for up
-    front). The static baseline is a single peak-provisioned bucket; the
-    auto server starts with an EMPTY ladder and derives buckets from the
-    stream (growth on oversize, quantile refits, LRU program eviction).
-    Both servers see the identical stream twice: the first pass is the
-    cold/adaptation pass (includes on-demand compiles), the second is
-    steady state. Records padding waste (computed-but-unrequested points /
-    computed points) and p50/p95 latency for each.
+def _autoscale_run(cfg, reference, max_batch, smoke, shard_devices=1):
+    """Nonstationary-traffic core shared by the unsharded and sharded
+    autoscale scenarios: static peak-provisioned ladder vs the auto ladder
+    over the identical two-phase stream (cold adaptation pass + warm pass).
+    Returns the machine-readable record and asserts auto <= static waste.
     """
     g = 32 if smoke else 64
     small, big = (96, 224) if smoke else (192, 448)
@@ -187,19 +188,20 @@ def bench_autoscale(cfg, reference, max_batch, smoke, rows, report):
     acfg = cfg.replace(bucket_granularity=g, bucket_quantiles=(0.5, 0.9),
                        bucket_refit_every=max(4, n_phase // 2),
                        max_live_buckets=4)
-    report["autoscale"] = {
+    out = {
         "traffic": {"sizes": sizes, "phases": [small, big],
                     "granularity": g, "static_ladder": [peak]},
+        "shard_devices": int(shard_devices),
     }
     waste = {}
     for name, ladder in (("static", (peak,)), ("auto", "auto")):
         server = GNNServer(acfg, ladder, max_batch=max_batch,
                            reference=reference, check_requests=False,
-                           seed=0)
+                           seed=0, shard_devices=shard_devices)
         cold = _steady_run(server, reqs, async_mode=True)
         warm = _steady_run(server, reqs, async_mode=True)
         waste[name] = warm["padding_waste_frac"]
-        report["autoscale"][name] = {
+        out[name] = {
             "ladder": list(server.ladder()),
             # cold pass p99 IS the p99-during-ladder-growth: the tail
             # request pays the on-demand calibrate+compile
@@ -212,16 +214,91 @@ def bench_autoscale(cfg, reference, max_batch, smoke, rows, report):
                       "padding_waste_frac", "bucket_hits", "bucket_misses",
                       "bucket_evictions", "bucket_compiles")},
         }
-        rows.append((f"autoscale_{name}_warm_p95", warm["p95_ms"] * 1e3,
-                     f"waste={warm['padding_waste_frac']:.1%} "
-                     f"rps={warm['throughput_rps']:.2f} "
-                     f"ladder={list(server.ladder())}"))
         for r in cold["results"] + warm["results"]:
             assert r.error is None and np.isfinite(r.fields).all()
     # the autoscaler's reason to exist: resolution-matched buckets waste
     # (far) fewer padded points than peak provisioning on shifting traffic
     assert waste["auto"] <= waste["static"] + 1e-9, waste
+    return out
+
+
+def bench_autoscale(cfg, reference, max_batch, smoke, rows, report):
+    """Nonstationary request-size traffic: autoscaling vs static ladder.
+
+    Two traffic phases — small-resolution requests, then a shift to large
+    ones (the regime an operator must provision a static ladder for up
+    front). The static baseline is a single peak-provisioned bucket; the
+    auto server starts with an EMPTY ladder and derives buckets from the
+    stream (growth on oversize, quantile refits, LRU program eviction).
+    Both servers see the identical stream twice: the first pass is the
+    cold/adaptation pass (includes on-demand compiles), the second is
+    steady state. Records padding waste (computed-but-unrequested points /
+    computed points) and p50/p95 latency for each.
+    """
+    out = _autoscale_run(cfg, reference, max_batch, smoke)
+    report["autoscale"] = out
+    for name in ("static", "auto"):
+        warm = out[name]["warm"]
+        rows.append((f"autoscale_{name}_warm_p95", warm["p95_ms"] * 1e3,
+                     f"waste={warm['padding_waste_frac']:.1%} "
+                     f"rps={warm['throughput_rps']:.2f} "
+                     f"ladder={out[name]['ladder']}"))
     rows.append(("autoscale_waste_ratio", 0.0,
+                 f"auto={out['auto']['warm']['padding_waste_frac']:.1%} vs "
+                 f"static={out['static']['warm']['padding_waste_frac']:.1%}"))
+
+
+def _sharded_child(args):
+    """Run the autoscale traffic with ``shard_devices`` shards in THIS
+    process (the parent forced the host device count via XLA_FLAGS before
+    jax initialized). Emits one ``SHARDED_JSON {...}`` line."""
+    verts, faces = geo.car_surface(geo.sample_params(0), nu=args.nu,
+                                   nv=args.nv)
+    cfg = GNNConfig().reduced()
+    out = _autoscale_run(cfg, (verts, faces), args.max_batch, args.smoke,
+                         shard_devices=args.shard_devices)
+    print("SHARDED_JSON " + json.dumps(out))
+
+
+def bench_sharded_autoscale(max_batch, nu, nv, shard_devices, smoke, rows,
+                            report):
+    """Autoscaling under shard_map: the same nonstationary stream served
+    with ``shard_devices`` shards per program (bucketized ShardSpecs +
+    cross-request packing). Runs in a subprocess because the forced host
+    device count must be set before jax initializes. Records padding waste
+    (including replayed pack lanes) and warm p95 per ladder; asserts the
+    auto ladder wastes no more than the peak-provisioned static one.
+    """
+    cmd = [sys.executable, os.path.abspath(__file__), "--sharded-child",
+           "--shard-devices", str(shard_devices),
+           "--max-batch", str(max_batch), "--nu", str(nu), "--nv", str(nv)]
+    if smoke:
+        cmd.append("--smoke")
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") + " --xla_force_host_"
+                        f"platform_device_count={shard_devices}").strip()
+    proc = subprocess.run(cmd, capture_output=True, text=True, timeout=900,
+                          env=env)
+    assert proc.returncode == 0, \
+        f"sharded autoscale child failed:\n{proc.stdout}\n{proc.stderr}"
+    line = [ln for ln in proc.stdout.splitlines()
+            if ln.startswith("SHARDED_JSON ")][-1]
+    out = json.loads(line.split(" ", 1)[1])
+    report["sharded_autoscale"] = out
+    waste = {}
+    for name in ("static", "auto"):
+        warm = out[name]["warm"]
+        waste[name] = warm["padding_waste_frac"]
+        rows.append((f"sharded_autoscale_{name}_warm_p95",
+                     warm["p95_ms"] * 1e3,
+                     f"P={shard_devices} "
+                     f"waste={warm['padding_waste_frac']:.1%} "
+                     f"rps={warm['throughput_rps']:.2f} "
+                     f"ladder={out[name]['ladder']}"))
+    # the child already asserted this; re-check the parsed record so a
+    # protocol regression cannot silently drop the contract
+    assert waste["auto"] <= waste["static"] + 1e-9, waste
+    rows.append(("sharded_autoscale_waste_ratio", 0.0,
                  f"auto={waste['auto']:.1%} vs static={waste['static']:.1%}"))
 
 
@@ -411,11 +488,16 @@ def main():
                          "coldstart scenario (default: a fresh tmpdir)")
     ap.add_argument("--only", default=None,
                     help="comma-separated scenario subset to run "
-                         "(flush,agg,autoscale,coldstart,overload); "
-                         "default: all")
+                         "(flush,agg,autoscale,sharded_autoscale,coldstart,"
+                         "overload); default: all")
+    ap.add_argument("--shard-devices", type=int, default=2,
+                    help="shard count for the sharded_autoscale scenario "
+                         "(forced host devices in a subprocess)")
     ap.add_argument("--coldstart-child", default=None,
                     choices=("fresh", "artifact"),
                     help="internal: run as a coldstart measurement child")
+    ap.add_argument("--sharded-child", action="store_true",
+                    help="internal: run as the sharded autoscale child")
     ap.add_argument("--artifact-path", default=None,
                     help="internal: deploy artifact for --coldstart-child")
     args = ap.parse_args()
@@ -425,6 +507,11 @@ def main():
         args.nu = args.nu or 128
         args.nv = args.nv or 64
         _coldstart_child(args)
+        return
+    if args.sharded_child:
+        args.nu = args.nu or 128
+        args.nv = args.nv or 64
+        _sharded_child(args)
         return
 
     bucket = args.bucket or (256 if args.smoke else 512)
@@ -448,7 +535,8 @@ def main():
             "smoke": bool(args.smoke),
         },
     }
-    all_scenarios = ("flush", "agg", "autoscale", "coldstart", "overload")
+    all_scenarios = ("flush", "agg", "autoscale", "sharded_autoscale",
+                     "coldstart", "overload")
     scenarios = set((args.only or ",".join(all_scenarios)).split(","))
     unknown = scenarios - set(all_scenarios)
     assert not unknown, f"unknown --only scenarios: {sorted(unknown)}"
@@ -461,6 +549,9 @@ def main():
     if "autoscale" in scenarios:
         bench_autoscale(cfg, reference, args.max_batch, args.smoke, rows,
                         report)
+    if "sharded_autoscale" in scenarios:
+        bench_sharded_autoscale(args.max_batch, nu, nv, args.shard_devices,
+                                args.smoke, rows, report)
     if "coldstart" in scenarios:
         bench_coldstart(cfg, bucket, args.max_batch, nu, nv,
                         args.compile_cache, rows, report)

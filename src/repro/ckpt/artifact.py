@@ -64,6 +64,26 @@ def unpack_multiscale_spec(d: dict) -> MultiscaleSpec:
                           k=int(d["k"]), grids=grids)
 
 
+def pack_shard_spec(spec) -> dict:
+    """ShardSpec -> plain dict: the frozen sharded-program parameters
+    (shard/halo topology, per-shard multiscale spec, calibrated halo width)
+    a restored sharded server reuses instead of re-planning the reference."""
+    return {
+        "n_shards": int(spec.n_shards),
+        "halo_hops": int(spec.halo_hops),
+        "halo_width": float(spec.halo_width),
+        "ms": pack_multiscale_spec(spec.ms),
+    }
+
+
+def unpack_shard_spec(d: dict):
+    from repro.graphx.sharded import ShardSpec
+    return ShardSpec(n_shards=int(d["n_shards"]),
+                     halo_hops=int(d["halo_hops"]),
+                     ms=unpack_multiscale_spec(d["ms"]),
+                     halo_width=float(d.get("halo_width", 0.0)))
+
+
 # ------------------------------------------------------------- AOT programs
 
 def serialize_compiled(compiled) -> Optional[bytes]:

@@ -171,6 +171,13 @@ class GNNConfig:
     bucket_quantiles: Tuple[float, ...] = (0.5, 0.9)  # refit ladder targets
     bucket_refit_every: int = 32       # submits between ladder refits
     bucket_hist_len: int = 1024        # request-size histogram window
+    # sharded serving (shard_devices > 1): headroom multiplier on the
+    # reference plan's per-shard level capacities, so statistically similar
+    # requests fit one frozen ShardSpec (= one compiled shard_map program
+    # per bucket size). The autoscaling ladder above applies unchanged to
+    # sharded buckets: ShardSpecs are derived per bucket size on demand
+    # (graphx.sharded.shard_spec_for), not frozen at server init.
+    shard_pad_factor: float = 1.3
     # observability (repro.telemetry): the span tracer + host profiler
     # annotations are gated by `telemetry` (a disabled tracer is a no-op
     # object — zero-cost-when-off); `trace_dir` is where exports land

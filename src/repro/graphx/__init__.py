@@ -7,12 +7,13 @@ package. The two produce identical graphs when the grid spec is exact
 (see ``hashgrid.max_knn_cell_ratio``), which the tests enforce.
 """
 from repro.graphx.hashgrid import (GridSpec, auto_spec, knn,  # noqa: F401
-                                   overflow_count, max_knn_cell_ratio,
-                                   symmetric_edges)
+                                   neighborhood_counts, overflow_count,
+                                   max_knn_cell_ratio, symmetric_edges)
 from repro.graphx.multiscale import (MultiscaleSpec,  # noqa: F401
                                      auto_multiscale_spec, multiscale_edges)
 from repro.graphx.pipeline import (make_batched_infer_fn,  # noqa: F401
                                    make_graph_forward, make_infer_fn)
-from repro.graphx.sharded import (ShardPlan, ShardSpec,  # noqa: F401
-                                  build_shard_spec, global_halo_width,
-                                  make_sharded_infer_fn, plan_shards)
+from repro.graphx.sharded import (PackPlan, ShardPlan,  # noqa: F401
+                                  ShardSpec, build_shard_spec,
+                                  global_halo_width, make_sharded_infer_fn,
+                                  pack_plans, plan_shards, shard_spec_for)

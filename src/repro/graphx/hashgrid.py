@@ -142,7 +142,7 @@ def calibrate_spec(points: np.ndarray, k: int, n_points: int | None = None,
     if n_cells > max_cells:
         shrink = (max_cells / n_cells) ** (1.0 / 3.0)
         res = tuple(int(max(1, math.floor(r * shrink))) for r in res)
-    occ = int(_neighborhood_counts(pts, res).max())
+    occ = int(neighborhood_counts(pts, res).max())
     cap = _round_up(max(int(math.ceil(occ * occupancy_safety)), 2 * k + 2),
                     128)
     return GridSpec(n_points=n_points or n, k=k, resolution=res,
@@ -345,13 +345,15 @@ def symmetric_edges(nbr_idx, nbr_mask) -> Tuple[jnp.ndarray, jnp.ndarray,
 
 # ---------------------------------------------------------------- diagnostics
 
-def _neighborhood_counts(pts: np.ndarray, res) -> np.ndarray:
+def neighborhood_counts(pts: np.ndarray, res) -> np.ndarray:
     """3x3x3-neighborhood occupancy of every *occupied* cell.
 
     Occupied-cell (CSR-style) computation — O(27 n log n) host work and O(n)
     memory regardless of resolution, so the diagnostics scale to the same
     paper-scale grids the csr layout unlocks. Empty cells host no queries, so
-    restricting to occupied cells loses nothing.
+    restricting to occupied cells loses nothing. Public because shard-spec
+    calibration (``graphx.sharded._merge_calibrate``) sizes merged-grid
+    capacities from the worst observed occupancy across shard clouds.
     """
     res = np.asarray(res, np.int64)
     lo, hi = pts.min(0), pts.max(0)
@@ -371,9 +373,13 @@ def _neighborhood_counts(pts: np.ndarray, res) -> np.ndarray:
     return np.where(found, counts[idx], 0).sum(axis=1)
 
 
+#: Back-compat alias — ``neighborhood_counts`` predates its promotion.
+_neighborhood_counts = neighborhood_counts
+
+
 def overflow_count(points: np.ndarray, n_valid: int, spec: GridSpec) -> int:
     """Host-side: candidate slots lost to neighborhood-capacity overflow."""
-    nc = _neighborhood_counts(np.asarray(points)[:n_valid], spec.resolution)
+    nc = neighborhood_counts(np.asarray(points)[:n_valid], spec.resolution)
     return int(np.maximum(nc - spec.neigh_cap, 0).sum())
 
 

@@ -74,14 +74,33 @@ class ShardSpec:
     caps on how many of each global level's points one shard may carry, and
     its grids are calibrated over shard-local clouds (a shard's extent — and
     hence its cell widths — differs from the full cloud's).
+
+    ``halo_width`` is the calibrated geometric halo dilation (see
+    :func:`global_halo_width`) frozen alongside the shapes, so per-request
+    geometric planning against this spec never touches the full point cloud
+    — the width is a property of the calibration reference, exactly like the
+    grid resolutions it is derived from. ``0.0`` means "not calibrated"
+    (graph-method specs, or specs built before the width was recorded).
     """
     n_shards: int
     halo_hops: int
     ms: MultiscaleSpec
+    halo_width: float = 0.0
 
     @property
     def n_points(self) -> int:
         return self.ms.n_points
+
+    def signature(self) -> tuple:
+        """Hashable identity of the compiled sharded program this spec
+        produces: shard/halo topology + every static shape and grid knob.
+        Two specs with equal signatures compile to interchangeable programs,
+        which makes ``(bucket_size, signature)`` the honest key into the
+        serving LRU compiled-program cache."""
+        return (self.n_shards, self.halo_hops, float(self.halo_width),
+                tuple(self.ms.level_sizes), self.ms.k,
+                tuple((tuple(g.resolution), g.neigh_cap, g.layout)
+                      for g in self.ms.grids))
 
 
 @dataclass
@@ -109,32 +128,108 @@ class ShardPlan:
         }
 
     def gather(self, shard_out) -> np.ndarray:
-        """Scatter owned rows of (P, Nmax, F) back into one (n, F) cloud."""
+        """Scatter owned rows of (P, Nmax, F) back into one (n, F) cloud.
+
+        One masked scatter over all shards at once: ownership is a
+        partition of the global ids, so the flattened owned indices never
+        collide and numpy fancy-index assignment is exact.
+        """
         shard_out = np.asarray(shard_out)
         out = np.zeros((self.n_global,) + shard_out.shape[2:],
                        shard_out.dtype)
-        for p in range(shard_out.shape[0]):
-            m = self.owned[p]
-            out[self.global_ids[p][m]] = shard_out[p][m]
+        m = self.owned
+        out[self.global_ids[m]] = shard_out[m]
         return out
+
+
+@dataclass
+class PackPlan:
+    """Several geometries packed into ONE padded sharded program call.
+
+    Cross-request packing: ``width`` is the program's static geometry (pack)
+    axis; each packed geometry keeps its own :class:`ShardPlan`. The pack
+    axis itself is the segment id — geometry ``g``'s points, grids, edge
+    masks and normalizer encode/decode all live in lane ``g`` of a
+    ``jax.vmap`` inside the sharded program, so edges can never cross
+    geometries and per-geometry outputs are bitwise independent of their
+    lane neighbors. Fewer than ``width`` geometries replay the last real
+    plan into the padding lanes (static shapes; the compute is discarded).
+
+    ``batch()`` stacks each plan's device arrays to ``(P, G, Nmax, ...)``;
+    ``gather(out)`` de-interleaves ``(P, G, Nmax, F)`` device output back
+    into one owned-node ``(n, F)`` cloud per real geometry, in pack order.
+    """
+    plans: Sequence[ShardPlan]
+    width: int
+
+    def __post_init__(self):
+        if not self.plans:
+            raise ValueError("PackPlan needs at least one ShardPlan")
+        if len(self.plans) > self.width:
+            raise ValueError(f"{len(self.plans)} plans exceed pack width "
+                             f"{self.width}")
+        sig = self.plans[0].spec.signature()
+        for p in self.plans[1:]:
+            if p.spec.signature() != sig:
+                raise ValueError("packed plans must share one ShardSpec "
+                                 "(one compiled program)")
+
+    @property
+    def spec(self) -> ShardSpec:
+        return self.plans[0].spec
+
+    def batch(self) -> dict:
+        """The (P, G, ...) arrays consumed by the ``pack_width > 1``
+        program of :func:`make_sharded_infer_fn`."""
+        per = [p.batch() for p in self.plans]
+        per += [per[-1]] * (self.width - len(per))   # replay padding lanes
+        return {k: jnp.stack([b[k] for b in per], axis=1)
+                for k in _BATCH_KEYS}
+
+    def gather(self, shard_out) -> list:
+        """Per-geometry owned-node clouds from (P, G, Nmax, F) output."""
+        shard_out = np.asarray(shard_out)
+        return [plan.gather(shard_out[:, g])
+                for g, plan in enumerate(self.plans)]
+
+
+def pack_plans(plans: Sequence[ShardPlan], width: int) -> PackPlan:
+    """Pack same-spec shard plans into one :class:`PackPlan` of ``width``."""
+    return PackPlan(plans=list(plans), width=int(width))
 
 
 # ------------------------------------------------------------------ planning
 
 def global_halo_width(points: np.ndarray, ms: MultiscaleSpec) -> float:
-    """Upper bound on any multi-scale edge length, from the grid geometry.
+    """Upper bound on any edge length the device grid kNN can produce.
 
-    Exactness of a level's grid means the k-th-neighbor distance is at most
-    the narrowest cell width (``hashgrid.max_knn_cell_ratio <= 1``), so every
-    edge of the union is at most the max over levels of that width. Pure
-    numpy on extents — no neighbor search.
+    Per level: when the grid is in its exact regime — the k-th-neighbor
+    distance fits the narrowest cell width (``hashgrid.max_knn_cell_ratio
+    <= 1``) — every emitted edge is a true kNN edge bounded by that width.
+    Sparse or anisotropic levels (a 16-point coarse level of a car surface)
+    can be uncalibratable to that regime; there the 27-cell search stencil
+    is the only honest bound: a returned neighbor lies within two cells per
+    axis, i.e. ``2 * ||cell_widths||``. Using the cell width alone in that
+    regime under-bounds real edges and geometric halos silently miss
+    neighbors (observed as ~1e-5 owned-node drift at 64-point buckets).
+
+    Runs one cKDTree query per level (host planning path, never per
+    dispatch: serving freezes the result into ``ShardSpec.halo_width`` at
+    calibration time).
     """
+    from scipy.spatial import cKDTree
     pts = np.asarray(points, np.float32)
     width = 0.0
     for n_l, g in zip(ms.level_sizes, ms.grids):
         lvl = pts[: min(n_l, len(pts))]
         extent = np.maximum(lvl.max(0) - lvl.min(0), 1e-6)
-        width = max(width, float((extent / np.asarray(g.resolution)).min()))
+        w = extent / np.asarray(g.resolution)
+        kth = float(cKDTree(lvl).query(
+            lvl, k=min(g.k + 1, len(lvl)))[0][:, -1].max())
+        if kth <= w.min():
+            width = max(width, float(w.min()))
+        else:
+            width = max(width, float(2.0 * np.linalg.norm(w)))
     return width
 
 
@@ -195,7 +290,7 @@ def _merge_calibrate(clouds: Sequence[np.ndarray], k: int, n_points: int,
                                      cell_safety=cell_safety, layout=layout)
              for c in usable]
     res = tuple(min(s.resolution[a] for s in specs) for a in range(3))
-    occ = max(int(hashgrid._neighborhood_counts(c, res).max())
+    occ = max(int(hashgrid.neighborhood_counts(c, res).max())
               for c in usable)
     cap = _round_up(max(int(np.ceil(occ * occupancy_safety)), 2 * k + 2), 128)
     return hashgrid.GridSpec(n_points=n_points, k=k, resolution=res,
@@ -205,7 +300,8 @@ def _merge_calibrate(clouds: Sequence[np.ndarray], k: int, n_points: int,
 def build_shard_spec(membership: dict, points: np.ndarray,
                      level_sizes: Sequence[int], k: int, n_shards: int,
                      halo_hops: int, *, pad_factor: float = 1.0,
-                     grid_layout: str = "csr") -> ShardSpec:
+                     grid_layout: str = "csr",
+                     halo_width: float = 0.0) -> ShardSpec:
     """Freeze static shapes + local grids from a planned membership.
 
     ``pad_factor`` > 1 leaves headroom so statistically similar requests
@@ -232,7 +328,8 @@ def build_shard_spec(membership: dict, points: np.ndarray,
                 neigh_cap=min(grids[i].neigh_cap, caps[i]),
                 layout=grids[i].layout)
     ms = MultiscaleSpec(level_sizes=tuple(caps), k=k, grids=tuple(grids))
-    return ShardSpec(n_shards=n_shards, halo_hops=halo_hops, ms=ms)
+    return ShardSpec(n_shards=n_shards, halo_hops=halo_hops, ms=ms,
+                     halo_width=float(halo_width))
 
 
 def plan_shards(points: np.ndarray, normals: np.ndarray, n_shards: int,
@@ -248,7 +345,11 @@ def plan_shards(points: np.ndarray, normals: np.ndarray, n_shards: int,
     cloud the single-device pipeline would consume). With ``spec`` given the
     plan is padded to its frozen shapes and raises ``ValueError`` when any
     shard exceeds them (the serving rejection path); otherwise a fresh
-    ``ShardSpec`` is calibrated from this very request.
+    ``ShardSpec`` is calibrated from this very request. Under
+    ``method='geometric'`` a spec that carries a calibrated
+    ``spec.halo_width`` supplies the dilation width by default, so planning
+    a request against a frozen spec is pure RCB + box arithmetic — no pass
+    over the cloud to re-derive the width.
     """
     pts = np.asarray(points, np.float32)
     n = len(pts)
@@ -264,6 +365,8 @@ def plan_shards(points: np.ndarray, normals: np.ndarray, n_shards: int,
         mem = _membership_from_graph(pts, labels, n_shards, level_sizes, k,
                                      ring)
     elif method == "geometric":
+        if halo_width is None and spec is not None and spec.halo_width > 0:
+            halo_width = spec.halo_width
         if halo_width is None:
             raise ValueError("method='geometric' needs halo_width (see "
                              "global_halo_width)")
@@ -278,7 +381,8 @@ def plan_shards(points: np.ndarray, normals: np.ndarray, n_shards: int,
     if spec is None:
         spec = build_shard_spec(mem, pts, level_sizes, k, n_shards,
                                 halo_hops, pad_factor=pad_factor,
-                                grid_layout=grid_layout)
+                                grid_layout=grid_layout,
+                                halo_width=halo_width or 0.0)
     elif spec.n_shards != n_shards or spec.halo_hops != halo_hops:
         raise ValueError("spec does not match requested shards/halo")
 
@@ -317,27 +421,79 @@ def plan_shards(points: np.ndarray, normals: np.ndarray, n_shards: int,
                      normals=out["normals"], n_global=n)
 
 
+def shard_spec_for(bucket_size: int, n_shards: int, halo_hops: int,
+                   pad_factor: float, *, reference_points: np.ndarray,
+                   reference_normals: np.ndarray,
+                   level_sizes: Sequence[int], k: int,
+                   ms: Optional[MultiscaleSpec] = None,
+                   method: str = "geometric",
+                   grid_layout: str = "csr") -> ShardSpec:
+    """Derive the frozen sharded-program parameters for ONE bucket size.
+
+    The bucketized-ShardSpec entry point: per-shard level capacities,
+    merged shard-local grids and the geometric halo width all come from a
+    reference cloud at the bucket's resolution — a ``ShardSpec`` is a
+    function of ``(bucket_size, n_shards, halo_hops, pad_factor)`` plus the
+    calibration reference, never an init-time constant. Deterministic for a
+    fixed reference, so every rebuild of a bucket (LRU evict→rebuild,
+    restart from a deploy artifact) reproduces the identical
+    :meth:`ShardSpec.signature` and therefore the identical compiled
+    program.
+
+    ``ms`` is the bucket's *global* multi-scale spec, used only to bound
+    the halo width (:func:`global_halo_width`); when omitted it is
+    calibrated from the reference prefix levels.
+    """
+    pts = np.asarray(reference_points, np.float32)
+    if len(pts) != int(bucket_size) or level_sizes[-1] != int(bucket_size):
+        raise ValueError(
+            f"reference cloud ({len(pts)}) and finest level "
+            f"({level_sizes[-1]}) must both equal bucket_size "
+            f"({bucket_size})")
+    if ms is None:
+        grids = tuple(hashgrid.calibrate_spec(pts[:m], k, n_points=m)
+                      for m in level_sizes)
+        ms = MultiscaleSpec(level_sizes=tuple(level_sizes), k=k, grids=grids)
+    width = global_halo_width(pts, ms) if method == "geometric" else None
+    plan = plan_shards(pts, reference_normals, n_shards, halo_hops,
+                       level_sizes, k, method=method, halo_width=width,
+                       pad_factor=pad_factor, grid_layout=grid_layout)
+    return plan.spec
+
+
 # ----------------------------------------------------------------- execution
 
 def make_sharded_infer_fn(cfg: GNNConfig, sspec: ShardSpec, mesh, *,
                           axis: str = "data", knn_impl: str = "xla",
                           interpret: bool = True, norm_in=None, norm_out=None,
-                          jit: bool = True):
-    """Build ``infer(params, batch) -> (P, Nmax, node_out)`` under shard_map.
+                          jit: bool = True, pack_width: int = 1):
+    """Build ``infer(params, batch) -> (P[, G], Nmax, node_out)`` under
+    shard_map.
 
-    ``batch`` is ``ShardPlan.batch()``; each device receives its own
-    (1, Nmax, ...) block, builds its shard's multi-scale graph with the
-    shard-local grids, masks edges to the halo rule, and runs the *same*
+    With ``pack_width == 1`` (the default), ``batch`` is
+    ``ShardPlan.batch()``: each device receives its own (1, Nmax, ...)
+    block, builds its shard's multi-scale graph with the shard-local grids,
+    masks edges to the halo rule, and runs the *same*
     ``make_graph_forward`` as the single-device pipeline. No collectives:
     the halos already make every shard self-contained; the gather back to
     one cloud is ``ShardPlan.gather``.
+
+    With ``pack_width > 1`` (cross-request packing), ``batch`` is
+    ``PackPlan.batch()`` — (P, G, Nmax, ...) arrays — and the per-shard
+    body vmaps over the geometry (pack) axis G. The pack lane is the
+    segment id: every lane builds its own graph from its own points and
+    grids, so no edge, aggregation or normalizer statistic can cross
+    geometries; outputs per lane equal the ``pack_width == 1`` program run
+    solo on that geometry. The output grows a matching G axis, consumed by
+    ``PackPlan.gather``.
     """
     forward = make_graph_forward(cfg, norm_in=norm_in, norm_out=norm_out,
                                  interpret=interpret)
     ms = sspec.ms
+    pack_width = int(pack_width)
 
-    def local(params, batch):
-        b = {k: v[0] for k, v in batch.items()}   # strip the shard axis
+    def one(params, b):
+        """One geometry lane on one shard: (Nmax, ...) -> (Nmax, out)."""
         pts = b["points"].astype(jnp.float32)
         s, r, em = multiscale_edges(pts, b["level_counts"], ms,
                                     impl=knn_impl, interpret=interpret)
@@ -345,7 +501,15 @@ def make_sharded_infer_fn(cfg: GNNConfig, sspec: ShardSpec, mesh, *,
         s = jnp.where(em, s, 0)
         r = jnp.where(em, r, 0)
         pred = forward(params, pts, b["normals"], s, r, em)
-        return (pred * b["owned"][:, None].astype(pred.dtype))[None]
+        return pred * b["owned"][:, None].astype(pred.dtype)
+
+    def local(params, batch):
+        b = {k: v[0] for k, v in batch.items()}   # strip the shard axis
+        if pack_width > 1:
+            out = jax.vmap(lambda bg: one(params, bg))(b)
+        else:
+            out = one(params, b)
+        return out[None]
 
     in_specs = (P(), {k: P(axis) for k in _BATCH_KEYS})
     fn = shard_map(local, mesh=mesh, in_specs=in_specs, out_specs=P(axis))

@@ -26,8 +26,10 @@ used idle bucket is evicted and transparently rebuilt (recompiled) if its
 size becomes hot again. ``ServerStats`` records the cache behavior
 (``bucket_hits``/``bucket_misses``/``bucket_evictions``/``bucket_compiles``,
 ``grown_buckets``) and the padding waste (``padding_waste_frac``). Auto mode
-is gated to unsharded serving — the sharded path freezes per-shard shapes at
-init, so it requires a static ladder.
+works sharded and unsharded alike: a sharded bucket's per-shard shapes
+(its ``ShardSpec``) are derived from the bucket size on demand
+(``graphx.sharded.shard_spec_for``), so ladder growth, quantile refits and
+LRU evict→rebuild apply unchanged under ``shard_devices > 1``.
 
 Oversize requests on a *static* ladder are never silently truncated either:
 the request is served at the largest bucket with a warning and an
@@ -59,14 +61,21 @@ Aggregation: the processor scatter-add follows ``cfg.agg_impl`` (``'xla'``,
 run device-side inside the bucket's compiled program. ``agg_impl=`` on the
 server overrides the config per deployment.
 
-Sharded serving (``shard_devices > 1``): one request is split across devices
-instead of batching requests — RCB partitions + halo rings via
-``repro.graphx.sharded``, each device building its own shard's graph under
-``shard_map`` (the paper-scale 2M-point mode; see README "Sharded serving").
-Requests whose shards outgrow the bucket's frozen shard shapes are rejected
-with ``Result.error`` set, like overflow rejections. The async flush
-pipelines host shard *planning* of request i+1 against the in-flight
-shard_map call of request i.
+Sharded serving (``shard_devices > 1``): each request is split across
+devices — RCB partitions + halo rings via ``repro.graphx.sharded``, each
+device building its own shard's graph under ``shard_map`` (the paper-scale
+2M-point mode; see README "Sharded serving"). A bucket's ``ShardSpec``
+(per-shard level capacities, merged shard-local grids, the calibrated halo
+width) is derived from the bucket size when the bucket is first built and
+cached per size like grid calibration, so sharded buckets ride the same
+compiled-program LRU cache as unsharded ones. Up to ``max_batch`` small
+geometries are *packed* into one padded sharded program call — each
+geometry in its own vmap lane (the segment id), so edges, aggregations and
+normalizer stats never cross geometries and each packed output equals the
+request served solo. Requests whose shards outgrow the bucket's frozen
+shard shapes are rejected with ``Result.error`` set, like overflow
+rejections. The async flush pipelines host shard *planning* of batch i+1
+against the in-flight shard_map call of batch i.
 
 Sampling is deterministic per (server seed, request id): resubmitting a
 request id reproduces its point cloud bit-for-bit regardless of what other
@@ -181,6 +190,8 @@ class Bucket:
     last_used: int = 0                 # LRU tick (autoscaler eviction order)
     sspec: Optional[sharded.ShardSpec] = None   # sharded mode only
     shard_infer: object = None                  # jitted shard_map fn
+    plan_sig: Optional[tuple] = None            # sspec.signature(): the
+                                                # (size, plan) cache identity
 
 
 @dataclass
@@ -428,7 +439,8 @@ class GNNServer:
     string ``"auto"``: the autoscaler then starts with an empty ladder and
     derives bucket sizes from traffic (see the module docstring). Passing a
     ladder together with ``cfg.bucket_policy == "auto"`` seeds the
-    autoscaler with those sizes. The auto policy is unsharded-only.
+    autoscaler with those sizes. The auto policy applies sharded and
+    unsharded alike (sharded buckets derive their ShardSpec per size).
     """
 
     def __init__(self, cfg: GNNConfig,
@@ -439,7 +451,8 @@ class GNNServer:
                  norm_in=None, norm_out=None, seed: int = 0,
                  reference=None, check_requests: bool = True,
                  reject_overflow: bool = False, shard_devices: int = 1,
-                 shard_pad_factor: float = 1.3, async_flush: bool = True,
+                 shard_pad_factor: Optional[float] = None,
+                 async_flush: bool = True,
                  donate: bool = True, telemetry: Optional[Telemetry] = None,
                  max_queue_depth: Optional[int] = None,
                  shed_policy: Optional[str] = None,
@@ -466,12 +479,6 @@ class GNNServer:
                 f"cfg.bucket_policy must be 'static' or 'auto', "
                 f"got {cfg.bucket_policy!r}")
         self.auto = bucket_sizes == "auto" or cfg.bucket_policy == "auto"
-        if self.auto and int(shard_devices) > 1:
-            raise ValueError(
-                "autoscaling buckets (bucket_sizes='auto') are gated to "
-                "unsharded serving: the sharded path freezes per-shard "
-                "shapes at init — pass a static ladder with "
-                "shard_devices > 1")
         seed_sizes = () if bucket_sizes == "auto" else \
             tuple(sorted(int(b) for b in bucket_sizes))
         if not self.auto and not seed_sizes:
@@ -483,7 +490,9 @@ class GNNServer:
         self.check_requests = check_requests
         self.reject_overflow = reject_overflow
         self.shard_devices = int(shard_devices)
-        self.shard_pad_factor = shard_pad_factor
+        self.shard_pad_factor = float(cfg.shard_pad_factor
+                                      if shard_pad_factor is None
+                                      else shard_pad_factor)
         self.async_flush = bool(async_flush)
         self.params = params if params is not None else meshgraphnet.init(
             jax.random.PRNGKey(seed), cfg)
@@ -500,6 +509,11 @@ class GNNServer:
         # evictions and seedable from a deploy artifact — an evict→rebuild
         # re-pays at most a compile-cache load, never host recalibration
         self._calib: Dict[int, MultiscaleSpec] = {}
+        # sharded sibling of _calib: one frozen ShardSpec per bucket size
+        # (per-shard capacities + merged grids + halo width), derived on
+        # demand from the bucket size (graphx.sharded.shard_spec_for) and
+        # kept across evictions / restorable from a deploy artifact
+        self._shard_calib: Dict[int, sharded.ShardSpec] = {}
         # AOT executables deserialized from a deploy artifact, consumed by
         # _build_bucket so the bucket's first dispatch runs a pre-compiled
         # program (zero traces, zero XLA compiles)
@@ -557,6 +571,12 @@ class GNNServer:
             # deploy-artifact state (from_artifact): learned ladder +
             # request-size histogram, calibrated specs, AOT executables
             self._calib.update(_restore.get("calib", {}))
+            # only specs matching THIS server's shard topology are usable;
+            # a changed shard_devices/n_mp_layers recalibrates on demand
+            self._shard_calib.update(
+                {n: s for n, s in _restore.get("shard_calib", {}).items()
+                 if s.n_shards == self.shard_devices
+                 and s.halo_hops == cfg.n_mp_layers})
             self._aot.update(_restore.get("aot", {}))
             self._ladder |= set(_restore.get("ladder", ()))
             for s in _restore.get("size_hist", ()):
@@ -598,6 +618,33 @@ class GNNServer:
             self.stats.bucket_calibrations += 1
         return ms
 
+    def _calibrate_shard(self, n: int, ms: MultiscaleSpec
+                         ) -> sharded.ShardSpec:
+        """ShardSpec derivation for one bucket size, cached per size.
+
+        The sharded sibling of :meth:`_calibrate`: per-shard level
+        capacities, merged shard-local grids and the geometric halo width
+        are all functions of ``(bucket size, shard_devices, n_mp_layers,
+        shard_pad_factor)`` plus the calibration reference — deterministic,
+        so an evict→rebuild (or an artifact restore, which ships the specs)
+        reproduces the identical compiled-program signature without
+        re-planning the reference.
+        """
+        sspec = self._shard_calib.get(n)
+        if sspec is not None:
+            return sspec
+        faults.fire("bucket.calibrate")
+        cfg = self.cfg
+        ref_pts, ref_nrm = self._sample_reference(n)
+        sspec = sharded.shard_spec_for(
+            n, self.shard_devices, cfg.n_mp_layers, self.shard_pad_factor,
+            reference_points=ref_pts, reference_normals=ref_nrm,
+            level_sizes=ms.level_sizes, k=cfg.k_neighbors, ms=ms)
+        self._shard_calib[n] = sspec
+        with self.stats.lock:
+            self.stats.bucket_calibrations += 1
+        return sspec
+
     def _build_bucket(self, n: int) -> Bucket:
         """Calibrate + wire one padding bucket.
 
@@ -613,22 +660,26 @@ class GNNServer:
         faults.fire("bucket.build")
         ms = self._calibrate(n)
         if self.shard_devices > 1:
-            ref_pts, ref_nrm = self._sample_reference(n)
-            levels = ms.level_sizes
-            # freeze per-shard shapes/grids from the reference plan;
-            # per-request planning is then cKDTree-free geometric numpy
-            ref_plan = sharded.plan_shards(
-                ref_pts, ref_nrm, self.shard_devices, cfg.n_mp_layers,
-                levels, cfg.k_neighbors, method="geometric",
-                halo_width=sharded.global_halo_width(ref_pts, ms),
-                pad_factor=self.shard_pad_factor)
-            sspec = ref_plan.spec
+            # per-shard shapes/grids are a function of the bucket size
+            # (cached per size like _calibrate); per-request planning is
+            # then cKDTree-free geometric numpy against the frozen spec
+            sspec = self._calibrate_shard(n, ms)
+            aot = self._aot.get(n)
+            if aot is not None:
+                b = Bucket(n_points=n, ms=ms, infer=None, aot=True,
+                           sspec=sspec, shard_infer=aot,
+                           plan_sig=sspec.signature())
+                b.cache_loads += 1
+                with self.stats.lock:
+                    self.stats.cache_loads += 1
+                return b
             shard_infer = sharded.make_sharded_infer_fn(
                 cfg, sspec, self._mesh, knn_impl=self._knn_impl,
                 interpret=self._interpret, norm_in=self._norm_in,
-                norm_out=self._norm_out)
+                norm_out=self._norm_out, pack_width=self.max_batch)
             return Bucket(n_points=n, ms=ms, infer=None, sspec=sspec,
-                          shard_infer=shard_infer)
+                          shard_infer=shard_infer,
+                          plan_sig=sspec.signature())
         aot = self._aot.get(n)
         if aot is not None:
             # deploy-artifact executable: already compiled, no jit cache —
@@ -664,8 +715,10 @@ class GNNServer:
     # restore time drops the executables and falls back to jit + the
     # persistent compilation cache)
     _ARTIFACT_KNOBS = ("max_batch", "n_levels", "seed", "check_requests",
-                      "reject_overflow", "async_flush")
-    _AOT_KNOBS = ("max_batch", "n_levels")
+                      "reject_overflow", "async_flush", "shard_devices",
+                      "shard_pad_factor")
+    _AOT_KNOBS = ("max_batch", "n_levels", "shard_devices",
+                  "shard_pad_factor")
 
     def _bucket_arg_specs(self, n: int):
         """ShapeDtypeStructs of one unsharded bucket's call signature."""
@@ -678,6 +731,33 @@ class GNNServer:
                 jax.ShapeDtypeStruct((rows, n, 3), f32),
                 jax.ShapeDtypeStruct((rows,), i32))
 
+    def _shard_arg_specs(self, n: int):
+        """ShapeDtypeStructs of one SHARDED bucket's call signature: the
+        (P[, G], Nmax, ...) batch laid out on the shard mesh, exactly what
+        ``shard_put(plan.batch())`` / ``shard_put(pack.batch())`` produce."""
+        from jax.sharding import NamedSharding, PartitionSpec
+        sspec = self._shard_calib[n]
+        sh = NamedSharding(self._mesh, PartitionSpec("data"))
+        p_sds = jax.tree_util.tree_map(
+            lambda a: jax.ShapeDtypeStruct(np.shape(a), np.asarray(a).dtype),
+            self.params)
+        mid = (self.max_batch,) if self.max_batch > 1 else ()
+        shards, nmax = sspec.n_shards, sspec.n_points
+        n_levels = len(sspec.ms.level_sizes)
+
+        def sds(shape, dt):
+            return jax.ShapeDtypeStruct(shape, dt, sharding=sh)
+
+        batch = {
+            "points": sds((shards, *mid, nmax, 3), np.float32),
+            "normals": sds((shards, *mid, nmax, 3), np.float32),
+            "level_counts": sds((shards, *mid, n_levels), np.int32),
+            "recv_ok": sds((shards, *mid, nmax), bool),
+            "send_ok": sds((shards, *mid, nmax), bool),
+            "owned": sds((shards, *mid, nmax), bool),
+        }
+        return (p_sds, batch)
+
     def save_artifact(self, path: str) -> dict:
         """Freeze this server's learned + compiled state into one file.
 
@@ -688,41 +768,51 @@ class GNNServer:
         the first request with zero XLA compiles and zero recalibration.
         Returns a small summary dict (bucket sizes, aot sizes, path).
 
-        Sharded servers are not supported: their per-shard shapes are
-        frozen from the reference plan at init and the shard_map programs
-        are not AOT-serializable, so there is no cold start to skip beyond
-        the persistent compilation cache (which works unchanged).
+        Sharded servers are supported like unsharded ones: the artifact
+        additionally freezes every calibrated ShardSpec (per-shard
+        capacities, merged grids, halo width) and attempts AOT lowering of
+        the shard_map programs against mesh-laid-out arg specs; where the
+        backend cannot serialize them the restored server falls back to
+        jit + the persistent compilation cache, never recalibration.
         """
-        if self.shard_devices > 1:
-            raise ValueError("deploy artifacts are unsharded-only; sharded "
-                             "serving already relies on the persistent "
-                             "compilation cache (cfg.compile_cache_dir)")
         with self._cond:
             live = sorted(self._buckets)
             ladder = sorted(set(self._buckets) | self._ladder)
             size_hist = [int(s) for s in self._size_hist]
         # calibrate every ladder target (cheap for live sizes: cached), so
-        # the restored server never runs the host cKDTree
+        # the restored server never runs the host cKDTree — nor, sharded,
+        # re-plans the reference for its ShardSpecs
         for n in ladder:
-            self._calibrate(n)
+            ms = self._calibrate(n)
+            if self.shard_devices > 1:
+                self._calibrate_shard(n, ms)
         aot: Dict[str, bytes] = {}
         for n in live:
             b = self._buckets[n]
-            infer = b.infer
+            sharded_mode = self.shard_devices > 1
+            infer = b.shard_infer if sharded_mode else b.infer
             if b.aot or not hasattr(infer, "lower"):
                 # the bucket itself runs a deserialized executable: rebuild
                 # the jittable fn just for lowering
-                infer = make_batched_infer_fn(
-                    self.cfg, b.ms, knn_impl=self._knn_impl,
-                    interpret=self._interpret, norm_in=self._norm_in,
-                    norm_out=self._norm_out, donate=self._donate)
+                if sharded_mode:
+                    infer = sharded.make_sharded_infer_fn(
+                        self.cfg, b.sspec, self._mesh,
+                        knn_impl=self._knn_impl, interpret=self._interpret,
+                        norm_in=self._norm_in, norm_out=self._norm_out,
+                        pack_width=self.max_batch)
+                else:
+                    infer = make_batched_infer_fn(
+                        self.cfg, b.ms, knn_impl=self._knn_impl,
+                        interpret=self._interpret, norm_in=self._norm_in,
+                        norm_out=self._norm_out, donate=self._donate)
+            arg_specs = self._shard_arg_specs(n) if sharded_mode else \
+                self._bucket_arg_specs(n)
             try:
                 # bypass the persistent cache: a cache-loaded executable
                 # serializes a payload that cannot re-link — AOT export
                 # needs a genuinely fresh backend compile
                 with compile_cache.suspended():
-                    compiled = infer.lower(
-                        *self._bucket_arg_specs(n)).compile()
+                    compiled = infer.lower(*arg_specs).compile()
             except Exception as e:
                 log.warning("AOT lowering failed for bucket %d (%s: %s); "
                             "artifact will carry specs only for this size",
@@ -757,6 +847,8 @@ class GNNServer:
             "size_hist": size_hist,
             "calib": {str(n): artifact_lib.pack_multiscale_spec(ms)
                       for n, ms in self._calib.items()},
+            "shard_calib": {str(n): artifact_lib.pack_shard_spec(s)
+                            for n, s in self._shard_calib.items()},
             "aot": aot,
         }
         artifact_lib.save_artifact(path, tree)
@@ -809,6 +901,8 @@ class GNNServer:
         ref = tree["reference"]
         calib = {int(n): artifact_lib.unpack_multiscale_spec(d)
                  for n, d in tree.get("calib", {}).items()}
+        shard_calib = {int(n): artifact_lib.unpack_shard_spec(d)
+                       for n, d in tree.get("shard_calib", {}).items()}
         aot = {}
         if aot_valid:
             for n, blob in tree.get("aot", {}).items():
@@ -820,6 +914,7 @@ class GNNServer:
             tuple(live) if live else "auto"
         restore = {
             "calib": calib,
+            "shard_calib": shard_calib,
             "aot": aot,
             "ladder": [int(n) for n in tree.get("ladder", ())],
             "size_hist": [int(s) for s in tree.get("size_hist", ())],
@@ -939,9 +1034,20 @@ class GNNServer:
         the active plan has an empty queue but is about to serve, and
         evicting it would force a pointless rebuild+recompile one item
         later. The cap is therefore soft within a single plan.
+
+        Sharded servers key the cache by ``(size, shard-plan signature)``:
+        a live bucket whose compiled program was built for a ShardSpec that
+        no longer matches the size's calibrated spec (e.g. the spec cache
+        was re-seeded from a deploy artifact) is a MISS — it is dropped and
+        rebuilt against the current spec rather than served stale.
         """
         with self._cond:
             b = self._buckets.get(n)
+            if b is not None and self.shard_devices > 1:
+                sc = self._shard_calib.get(n)
+                if sc is not None and b.plan_sig != sc.signature():
+                    del self._buckets[n]      # stale shard plan: rebuild
+                    b = None
             if b is not None:
                 self._tick += 1
                 b.last_used = self._tick
@@ -1165,7 +1271,7 @@ class GNNServer:
         there is nothing to warm yet; buckets compile on first traffic.
         """
         verts, faces = self._reference
-        width = 1 if self.shard_devices > 1 else self.max_batch
+        width = self.max_batch
         with self._serve_lock:
             with self._cond:
                 buckets = [self._buckets[n] for n in sorted(self._buckets)]
@@ -1303,25 +1409,47 @@ class GNNServer:
                              pts=np.zeros((0,)), record=record)
         faults.fire("serve.dispatch")
         if b.sspec is not None:
-            # sharded: one request per dispatch (batch axis == shard axis)
-            assert len(ok_reqs) == 1
-            (pts, nrm), req = samples[0], ok_reqs[0]
-            try:
-                plan = sharded.plan_shards(
-                    pts, nrm, self.shard_devices, self.cfg.n_mp_layers,
-                    b.ms.level_sizes, self.cfg.k_neighbors,
-                    method="geometric",
-                    halo_width=sharded.global_halo_width(pts, b.ms),
-                    spec=b.sspec)
-            except ValueError as e:
-                pre = pre + [self._reject(req, b.n_points, str(e), pts,
-                                          record)]
+            # sharded: up to max_batch geometries pack into the vmap lanes
+            # of ONE padded shard_map call (each lane = one segment id)
+            reqs_kept: List[Request] = []
+            plans: List[sharded.ShardPlan] = []
+            kept_pts: List[np.ndarray] = []
+            # halo width was calibrated into the spec (cached per bucket);
+            # recompute from the cloud only for legacy specs without one
+            width = b.sspec.halo_width or None
+            for (pts, nrm), req in zip(samples, ok_reqs):
+                try:
+                    faults.fire("shard.plan")
+                    plan = sharded.plan_shards(
+                        pts, nrm, self.shard_devices, self.cfg.n_mp_layers,
+                        b.ms.level_sizes, self.cfg.k_neighbors,
+                        method="geometric",
+                        halo_width=(width if width is not None else
+                                    sharded.global_halo_width(pts, b.ms)),
+                        spec=b.sspec)
+                except Exception as e:
+                    # a failed plan is the REQUEST's fault (its shards
+                    # overflow the frozen spec, or chaos fired) — reject
+                    # it and keep packing; never quarantine the bucket
+                    pre = pre + [self._reject(req, b.n_points,
+                                              str(e) or repr(e), pts,
+                                              record)]
+                    continue
+                reqs_kept.append(req)
+                plans.append(plan)
+                kept_pts.append(pts)
+            if not plans:
                 return _InFlight(bucket=b, results=pre, ok_reqs=[], out=None,
-                                 pts=pts, record=record)
+                                 pts=np.zeros((0,)), record=record)
+            pack = sharded.pack_plans(plans, width=self.max_batch)
+            # the compiled program has a pack axis only when max_batch > 1
+            dev_batch = pack.batch() if self.max_batch > 1 else \
+                plans[0].batch()
             out = self._call_compiled(b, b.shard_infer, self.params,
-                                      shard_put(plan.batch(), self._mesh))
-            return _InFlight(bucket=b, results=pre, ok_reqs=[req], out=out,
-                             pts=pts, record=record, plan=plan)
+                                      shard_put(dev_batch, self._mesh))
+            return _InFlight(bucket=b, results=pre, ok_reqs=reqs_kept,
+                             out=out, pts=np.stack(kept_pts), record=record,
+                             plan=pack)
         # static batcher: always pad to max_batch rows so each bucket
         # compiles exactly once regardless of how full the microbatch is
         n = b.n_points
@@ -1422,33 +1550,52 @@ class GNNServer:
         out = faults.corrupt("serve.harvest", out)   # chaos: device garbage
         guard = self.cfg.nonfinite_guard
         if b.sspec is not None:
-            [req] = fl.ok_reqs
-            # the host-side gather back into one cloud is part of what the
-            # client waits for — stamp completion after it
-            fields = fl.plan.gather(out)
-            if guard and not np.isfinite(fields).all():
-                results.append(self._nonfinite_result(b, req, fields))
-                return results
+            # the host-side gather back into one cloud per geometry is part
+            # of what the client waits for — stamp completion after it.
+            # A max_batch == 1 program has no pack axis: normalize so the
+            # PackPlan de-interleave handles both layouts.
+            if out.ndim == 3:
+                out = out[:, None]
+            fields_per_geo = fl.plan.gather(out)
             t_done = time.perf_counter()
-            lat = t_done - (req.t_submit or t_done)
-            results.append(Result(request_id=req.request_id, points=fl.pts,
-                                  fields=fields, latency_s=lat,
-                                  bucket=b.n_points, batch_size=1))
-            if record:
-                asked, waste = self._padding_of(b, req)
-                self.stats.record_latency(lat)
-                self.stats.record_batch(1)
+            lats = []
+            for i, (req, fields) in enumerate(zip(fl.ok_reqs,
+                                                  fields_per_geo)):
+                if guard and not np.isfinite(fields).all():
+                    # contained per lane: one geometry's garbage never
+                    # rejects its pack neighbors
+                    results.append(self._nonfinite_result(b, req, fields))
+                    continue
+                lat = t_done - (req.t_submit or t_done)
+                lats.append((req, lat))
+                results.append(Result(
+                    request_id=req.request_id, points=fl.pts[i],
+                    fields=fields, latency_s=lat, bucket=b.n_points,
+                    batch_size=len(fl.ok_reqs)))
+                if tel_on:
+                    tracer.record_span("request", req.t_submit or t_done,
+                                       t_done,
+                                       trace_id=f"req-{req.request_id}",
+                                       bucket=b.n_points)
+            if record and fl.ok_reqs:
+                padding = [self._padding_of(b, req) for req in fl.ok_reqs]
+                # empty pack lanes replay the last geometry (PackPlan.batch)
+                # — discarded compute, so it is padding waste too
+                replay = (fl.plan.width - len(fl.ok_reqs)
+                          if self.max_batch > 1 else 0)
+                for _, lat in lats:
+                    self.stats.record_latency(lat)
+                self.stats.record_batch(len(fl.ok_reqs))
                 self.stats.record_stage("harvest", t_done - t_sync)
                 with self.stats.lock:
-                    self.stats.requested_points += asked
-                    self.stats.padding_points += waste
-                b.served += 1
+                    self.stats.requested_points += sum(a for a, _ in padding)
+                    self.stats.padding_points += \
+                        sum(w for _, w in padding) + replay * b.n_points
+                b.served += len(fl.ok_reqs)
             if tel_on:
                 tracer.record_span("harvest", t_sync, t_done,
-                                   bucket=b.n_points, batch=1)
-                tracer.record_span("request", req.t_submit or t_done,
-                                   t_done, trace_id=f"req-{req.request_id}",
-                                   bucket=b.n_points)
+                                   bucket=b.n_points,
+                                   batch=len(fl.ok_reqs))
             return results
         t_done = time.perf_counter()
         lats = []
@@ -1515,7 +1662,9 @@ class GNNServer:
         resolves them as timed-out error Results.
         """
         now = time.perf_counter()
-        width = 1 if self.shard_devices > 1 else self.max_batch
+        # sharded and unsharded alike: sharded batches pack into the vmap
+        # lanes of one shard_map call (see _dispatch_inner)
+        width = self.max_batch
         plan: List[Tuple[int, List[Request]]] = []
         timed_out: List[Tuple[int, Request]] = []
         for n in sorted(self._queues):

@@ -33,6 +33,9 @@ Known sites (grep for the literal to find the hook):
                       simulates a compile/OOM failure
 ``serve.harvest``     harvested device output (corrupt site: NaN-fill)
 ``serve.worker``      top of each background worker iteration
+``shard.plan``        per-geometry shard planning in the sharded dispatch
+                      (``_dispatch_inner``, ``shard_devices > 1``) — a
+                      firing plan resolves that request to ``Result.error``
 ``bucket.build``      bucket construction (``_build_bucket``)
 ``bucket.calibrate``  grid calibration (``_calibrate``)
 ``ckpt.write``        checkpoint payload write (before the temp file)
@@ -52,8 +55,8 @@ import numpy as np
 
 SITES = (
     "serve.dispatch", "serve.compile", "serve.harvest", "serve.worker",
-    "bucket.build", "bucket.calibrate", "ckpt.write", "ckpt.rename",
-    "train.batch",
+    "shard.plan", "bucket.build", "bucket.calibrate", "ckpt.write",
+    "ckpt.rename", "train.batch",
 )
 
 _MODES = ("raise", "delay", "corrupt")

@@ -1,0 +1,181 @@
+"""Sharded-autoscaler equivalence checks, run in a subprocess with
+XLA_FLAGS=--xla_force_host_platform_device_count=8 (jax device count is
+locked at first init, so the main pytest process cannot do this).
+
+PR-9 acceptance suite: the bucketized-ShardSpec serving path — auto ladder,
+LRU evict→rebuild, cross-request packing, shard.plan chaos, and the sharded
+deploy artifact — all under real multi-device shard_map:
+
+  A. auto ladder (grow + undersize reuse) under 2/4/8 shard devices serves
+     every request with outputs == the single-device auto server to 1e-5;
+  B. evict→rebuild of a sharded bucket reproduces the pre-eviction output
+     with zero extra calibrations and a stable compiled-program signature;
+  C. packed multi-geometry flush (max_batch > 1) == each geometry served
+     solo by a pack_width == 1 server, to 1e-5 (lane isolation);
+  D. a shard.plan fault resolves to Result.error on THAT request only —
+     pack neighbors still served, worker alive, nothing quarantined;
+  E. a sharded server saves a deploy artifact; the restored server matches
+     it to 1e-5 with zero recalibrations.
+"""
+import os
+import tempfile
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import numpy as np
+
+from repro.configs.base import GNNConfig
+from repro.data import geometry as geo
+from repro.launch.serve_gnn import GNNServer
+from repro.resilience.faults import FAULTS
+
+TOL = 1e-5
+SEED = 7
+
+
+def _cfg(**kw):
+    return GNNConfig().reduced().replace(levels=(64, 128, 256),
+                                         bucket_granularity=64, **kw)
+
+
+def _geom(i=0):
+    return geo.car_surface(geo.sample_params(i))
+
+
+def check_auto_ladder_equivalence():
+    """A. same nonstationary sequence on sharded vs single-device auto."""
+    verts, faces = _geom(0)
+    # grow 64, oversize-grow 256, then a size-50 ride in the live 64 bucket
+    seq = [64, 200, 50]
+    ref = GNNServer(_cfg(), "auto", max_batch=1, seed=SEED)
+    want = [ref.serve([(verts, faces, n)])[0] for n in seq]
+    assert ref.ladder() == (64, 256)
+    for p in (2, 4, 8):
+        srv = GNNServer(_cfg(), "auto", max_batch=1, seed=SEED,
+                        shard_devices=p)
+        got = [srv.serve([(verts, faces, n)])[0] for n in seq]
+        assert srv.ladder() == (64, 256), srv.ladder()
+        for w, g in zip(want, got):
+            assert g.error is None and w.bucket == g.bucket
+            np.testing.assert_array_equal(w.points, g.points)
+            d = float(np.abs(w.fields - g.fields).max())
+            assert d <= TOL, (p, w.bucket, d)
+        rep = srv.stats.report()
+        assert rep["grown_buckets"] == 2
+        assert rep["bucket_hits"] == 1          # the size-50 ride
+        print(f"A: auto ladder P={p} == single-device "
+              f"(maxdiff={max(float(np.abs(w.fields - g.fields).max()) for w, g in zip(want, got)):.2e})")
+
+
+def check_evict_rebuild_exact():
+    """B. sharded LRU evict→rebuild: same spec, same program, same output
+    as a static sharded ladder serving the identical request sequence."""
+    verts, faces = _geom(0)
+    sizes = [64, 128, 192, 64]                  # last 64 lands post-eviction
+    static = GNNServer(_cfg(), (64, 128, 192), max_batch=1, seed=SEED,
+                       shard_devices=4)
+    want = [static.serve([(verts, faces, n)])[0] for n in sizes]
+    srv = GNNServer(_cfg(max_live_buckets=2), "auto", max_batch=1,
+                    seed=SEED, shard_devices=4)
+    got = []
+    for n in sizes[:3]:
+        got.append(srv.serve([(verts, faces, n)])[0])
+    sig = srv._shard_calib[64].signature()
+    assert 64 not in srv._buckets               # 192 evicted it
+    got.append(srv.serve([(verts, faces, 64)])[0])   # rebuild
+    for w, g in zip(want, got):
+        assert g.error is None and w.bucket == g.bucket
+        np.testing.assert_array_equal(w.points, g.points)
+        np.testing.assert_allclose(g.fields, w.fields, atol=1e-6)
+    assert srv._buckets[64].plan_sig == sig == \
+        srv._shard_calib[64].signature()
+    rep = srv.stats.report()
+    assert rep["bucket_evictions"] == 2
+    assert rep["bucket_misses"] == 4            # 3 builds + the rebuild
+    # one ms + one shard calibration per SIZE, never re-paid on rebuild
+    assert rep["bucket_calibrations"] == 6
+    print("B: sharded evict->rebuild exact, calibrations=6, sig stable")
+
+
+def check_packing_isolation():
+    """C. packed multi-geometry flush == solo serves, lane by lane."""
+    geoms = [_geom(i) for i in (1, 2, 3)]
+    solo = GNNServer(_cfg(), (128,), max_batch=1, seed=SEED,
+                     shard_devices=2)
+    want = [solo.serve([(v, f, 128)])[0] for v, f in geoms]
+    packed = GNNServer(_cfg(), (128,), max_batch=3, seed=SEED,
+                       shard_devices=2)
+    got = packed.serve([(v, f, 128) for v, f in geoms])
+    got = sorted(got, key=lambda r: r.request_id)
+    rid0 = got[0]                               # request id 0: see section E
+    assert all(g.error is None for g in got)
+    assert {g.batch_size for g in got} == {3}   # one packed program call
+    for w, g in zip(want, got):
+        np.testing.assert_array_equal(w.points, g.points)
+        d = float(np.abs(w.fields - g.fields).max())
+        assert d <= TOL, d
+    print("C: packed (max_batch=3) == solo per geometry")
+    return packed, geoms, rid0
+
+
+def check_shard_plan_chaos(packed, geoms):
+    """D. shard.plan fault -> Result.error; neighbors, worker, bucket ok."""
+    packed.start(deadline_s=0.01)
+    try:
+        FAULTS.arm("shard.plan", mode="raise", nth=1, times=1)
+        try:
+            rids = [packed.submit(v, f, 128) for v, f in geoms[:2]]
+            bad = packed.result(rids[0], timeout=120.0)
+            good = packed.result(rids[1], timeout=120.0)
+        finally:
+            FAULTS.disarm("shard.plan")
+        assert bad.error is not None and "injected fault" in bad.error
+        assert np.isnan(bad.fields).all()
+        assert good.error is None and np.isfinite(good.fields).all()
+        h = packed.health()
+        assert h["worker_alive"] and not h["worker_dead"]
+        assert not h["quarantined_buckets"]     # nothing quarantined
+        assert packed.stats.report()["rejected_requests"] == 1
+    finally:
+        packed.stop()
+    print("D: shard.plan fault -> per-request error, worker alive, "
+          "no quarantine")
+
+
+def check_artifact_roundtrip(packed, geoms, want):
+    """E. sharded artifact save/restore: same answers, zero recalibration.
+
+    ``want`` is the source server's request-id-0 result (sampling is seeded
+    per request id, so the restored server's first request — id 0 — draws
+    the identical cloud).
+    """
+    verts, faces = geoms[0]
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "deploy.msgpack")
+        summary = packed.save_artifact(path)
+        dst = GNNServer.from_artifact(path)
+    assert dst.shard_devices == 2 and dst.max_batch == 3
+    assert dst._shard_calib[128].signature() == \
+        packed._shard_calib[128].signature()
+    [got] = dst.serve([(verts, faces, 128)])
+    assert got.error is None
+    d = float(np.abs(want.fields - got.fields).max())
+    assert d <= TOL, d
+    assert dst.stats.report()["bucket_calibrations"] == 0
+    print(f"E: sharded artifact roundtrip (aot={summary['aot_buckets']}, "
+          f"maxdiff={d:.2e})")
+
+
+def main():
+    import jax
+    assert len(jax.devices()) == 8, jax.devices()
+    check_auto_ladder_equivalence()
+    check_evict_rebuild_exact()
+    packed, geoms, rid0 = check_packing_isolation()
+    check_shard_plan_chaos(packed, geoms)
+    check_artifact_roundtrip(packed, geoms, rid0)
+    print("ALL_OK")
+
+
+if __name__ == "__main__":
+    main()

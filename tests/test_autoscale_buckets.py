@@ -130,11 +130,17 @@ def test_bucket_policy_validated():
         GNNServer(_cfg(), ())
 
 
-def test_auto_gated_off_sharded():
-    """The sharded path freezes per-shard shapes at init, so the autoscaler
-    is explicitly unsharded-only (documented gating)."""
-    with pytest.raises(ValueError, match="unsharded"):
-        GNNServer(_cfg(), "auto", shard_devices=2)
+def test_auto_composes_with_sharding():
+    """Auto + sharded is no longer gated: shard specs are derived per bucket
+    size, so the only init-time constraint left is the device count (the
+    multi-device behavior itself is covered by ``_sharded_auto_check.py``)."""
+    with pytest.raises(ValueError, match="devices"):
+        GNNServer(_cfg(), "auto", shard_devices=64)
+    # shard_pad_factor threads config -> constructor, ctor arg wins
+    srv = GNNServer(_cfg(shard_pad_factor=1.7), "auto")
+    assert srv.shard_pad_factor == 1.7
+    srv = GNNServer(_cfg(shard_pad_factor=1.7), "auto", shard_pad_factor=2.0)
+    assert srv.shard_pad_factor == 2.0
 
 
 def test_seeded_auto_ladder_via_config_policy():

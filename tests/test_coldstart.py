@@ -99,11 +99,23 @@ def test_load_artifact_rejects_non_artifact(tmp_path):
         GNNServer.from_artifact(p)
 
 
-def test_sharded_server_refuses_artifact():
-    srv = GNNServer(_cfg(), (64,), max_batch=1)
-    srv.shard_devices = 2                      # simulate the sharded gate
-    with pytest.raises(ValueError, match="unsharded-only"):
-        srv.save_artifact("unused")
+def test_shard_spec_roundtrips_through_artifact():
+    """Sharded servers save artifacts too: the frozen per-bucket ShardSpec
+    (shard topology + merged grids + calibrated halo width) survives the
+    msgpack pack/unpack with an identical compiled-program signature.
+    (The cross-process sharded save/restore runs in ``_sharded_auto_check``.)
+    """
+    from repro.graphx import sharded
+    from repro.core.graph_build import sample_surface
+
+    verts, faces = _geom(1)
+    pts, nrm = sample_surface(verts, faces, 128, np.random.default_rng(0))
+    spec = sharded.shard_spec_for(128, 2, 2, 1.3, reference_points=pts,
+                                  reference_normals=nrm,
+                                  level_sizes=(64, 128), k=4)
+    back = artifact_lib.unpack_shard_spec(artifact_lib.pack_shard_spec(spec))
+    assert back.signature() == spec.signature()
+    assert back.halo_width == spec.halo_width > 0.0
 
 
 # ----------------------------------------------- in-process restore behavior

@@ -39,6 +39,15 @@ def test_sharded_equivalence_multi_device():
     assert "ALL_OK" in out
 
 
+def test_sharded_autoscaler_multi_device():
+    """Bucketized ShardSpecs under real devices: auto ladder == single
+    device, sharded evict→rebuild exactness, packing isolation, shard.plan
+    chaos, and the sharded deploy artifact. Runs under 8 forced host
+    devices — see ``_sharded_auto_check.py``."""
+    out = run_script("_sharded_auto_check.py")
+    assert "ALL_OK" in out
+
+
 @pytest.mark.parametrize("method", ["graph", "geometric"])
 def test_plan_invariants(method):
     levels = (64, 128, 256)
@@ -134,6 +143,136 @@ def test_multiscale_vector_n_valid_matches_scalar():
     np.testing.assert_array_equal(np.asarray(r0), np.asarray(r1))
     with pytest.raises(ValueError, match="levels"):
         multiscale_edges(jnp.asarray(pts), jnp.asarray([1, 2, 3]), ms)
+
+
+def test_shard_spec_for_deterministic_bucket_function():
+    """The bucketized entry point: a ShardSpec is a pure function of
+    (bucket_size, n_shards, halo_hops, pad_factor) + the reference cloud —
+    two derivations agree signature-for-signature, the halo width is frozen
+    in, and a mismatched reference/bucket size is rejected."""
+    levels, k = (64, 128, 256), 4
+    pts, nrm = _cloud(levels[-1], 7)
+    kw = dict(reference_points=pts, reference_normals=nrm,
+              level_sizes=levels, k=k)
+    a = sharded.shard_spec_for(256, 4, 3, 1.3, **kw)
+    b = sharded.shard_spec_for(256, 4, 3, 1.3, **kw)
+    assert a.signature() == b.signature()
+    assert a.halo_width > 0.0
+    # the knobs are load-bearing: changing any changes the program identity
+    assert a.signature() != sharded.shard_spec_for(256, 2, 3, 1.3,
+                                                   **kw).signature()
+    assert a.signature() != sharded.shard_spec_for(256, 4, 2, 1.3,
+                                                   **kw).signature()
+    with pytest.raises(ValueError, match="bucket_size"):
+        sharded.shard_spec_for(128, 4, 3, 1.3, **kw)
+
+
+def test_plan_against_frozen_spec_uses_its_halo_width():
+    """A frozen spec supplies the calibrated halo width: planning a request
+    without halo_width equals planning it with the explicit global width the
+    spec was calibrated from."""
+    levels, k, h = (64, 128), 4, 2
+    pts, nrm = _cloud(levels[-1], 8)
+    spec = sharded.shard_spec_for(
+        128, 2, h, 1.3, reference_points=pts, reference_normals=nrm,
+        level_sizes=levels, k=k)
+    ms = _ms(pts, levels, k)
+    assert spec.halo_width == pytest.approx(sharded.global_halo_width(pts,
+                                                                      ms))
+    qpts, qnrm = _cloud(levels[-1], 9)
+    implicit = sharded.plan_shards(qpts, qnrm, 2, h, levels, k,
+                                   method="geometric", spec=spec)
+    explicit = sharded.plan_shards(qpts, qnrm, 2, h, levels, k,
+                                   method="geometric",
+                                   halo_width=spec.halo_width, spec=spec)
+    np.testing.assert_array_equal(implicit.global_ids, explicit.global_ids)
+    np.testing.assert_array_equal(implicit.hop, explicit.hop)
+    np.testing.assert_array_equal(implicit.owned, explicit.owned)
+
+
+def test_gather_vectorized_matches_reference_loop():
+    """The masked-scatter gather equals the per-shard python loop it
+    replaced, including non-owned rows carrying garbage."""
+    levels, k = (64, 128), 4
+    pts, nrm = _cloud(levels[-1], 10)
+    plan = sharded.plan_shards(pts, nrm, 3, 2, levels, k, method="graph")
+    rng = np.random.default_rng(0)
+    shard_out = rng.normal(size=plan.points.shape[:2] + (4,)).astype(
+        np.float32)
+    ref = np.zeros((plan.n_global, 4), np.float32)
+    for p in range(plan.points.shape[0]):
+        m = plan.owned[p]
+        ref[plan.global_ids[p][m]] = shard_out[p][m]
+    np.testing.assert_array_equal(plan.gather(shard_out), ref)
+
+
+def test_pack_plans_invariants():
+    """PackPlan validation + batch/gather layout: stacked lanes reproduce
+    each plan's own batch, padding lanes replay the last real plan, and
+    gather de-interleaves per geometry."""
+    levels, k, h = (64, 128), 4, 2
+    pts, nrm = _cloud(levels[-1], 11)
+    spec = sharded.shard_spec_for(
+        128, 2, h, 1.5, reference_points=pts, reference_normals=nrm,
+        level_sizes=levels, k=k)
+    p1 = sharded.plan_shards(*_cloud(levels[-1], 12), 2, h, levels, k,
+                             method="geometric", spec=spec)
+    p2 = sharded.plan_shards(*_cloud(levels[-1], 13), 2, h, levels, k,
+                             method="geometric", spec=spec)
+    pack = sharded.pack_plans([p1, p2], width=4)
+    assert pack.spec is spec
+    b = pack.batch()
+    assert b["points"].shape == (2, 4, spec.n_points, 3)
+    for g, plan in ((0, p1), (1, p2), (2, p2), (3, p2)):  # lanes 2,3 replay
+        solo = plan.batch()
+        for key in solo:
+            np.testing.assert_array_equal(np.asarray(b[key][:, g]),
+                                          np.asarray(solo[key]))
+    # gather de-interleaves: lane g's values land in geometry g's cloud
+    rng = np.random.default_rng(1)
+    out = rng.normal(size=(2, 4, spec.n_points, 4)).astype(np.float32)
+    got = pack.gather(out)
+    assert len(got) == 2
+    np.testing.assert_array_equal(got[0], p1.gather(out[:, 0]))
+    np.testing.assert_array_equal(got[1], p2.gather(out[:, 1]))
+    # validation: width overflow and mixed specs are rejected
+    with pytest.raises(ValueError, match="width"):
+        sharded.pack_plans([p1, p2], width=1)
+    other = sharded.plan_shards(pts, nrm, 2, h, levels, k,
+                                method="geometric",
+                                halo_width=spec.halo_width, pad_factor=2.0)
+    if other.spec.signature() != spec.signature():
+        with pytest.raises(ValueError, match="share"):
+            sharded.pack_plans([p1, other], width=4)
+    with pytest.raises(ValueError, match="at least one"):
+        sharded.pack_plans([], width=4)
+
+
+def test_packed_infer_matches_solo_single_device():
+    """pack_width > 1 on one device: every packed lane's owned-node output
+    equals the pack_width == 1 program run solo on that geometry."""
+    cfg = GNNConfig().reduced().replace(levels=(64, 128))
+    levels, k = cfg.levels, cfg.k_neighbors
+    h = cfg.n_mp_layers
+    pts, nrm = _cloud(levels[-1], 14)
+    spec = sharded.shard_spec_for(
+        128, 1, h, 1.5, reference_points=pts, reference_normals=nrm,
+        level_sizes=levels, k=k)
+    plans = [sharded.plan_shards(*_cloud(levels[-1], s), 1, h, levels, k,
+                                 method="geometric", spec=spec)
+             for s in (15, 16)]
+    params = meshgraphnet.init(jax.random.PRNGKey(2), cfg)
+    mesh = mesh_for_shards(1)
+    solo_fn = sharded.make_sharded_infer_fn(cfg, spec, mesh)
+    packed_fn = sharded.make_sharded_infer_fn(cfg, spec, mesh, pack_width=3)
+    pack = sharded.pack_plans(plans, width=3)
+    packed_out = np.asarray(jax.block_until_ready(
+        packed_fn(params, shard_put(pack.batch(), mesh))))
+    got = pack.gather(packed_out)
+    for plan, fields in zip(plans, got):
+        want = plan.gather(np.asarray(jax.block_until_ready(
+            solo_fn(params, shard_put(plan.batch(), mesh)))))
+        np.testing.assert_allclose(fields, want, atol=1e-5)
 
 
 def test_geometric_membership_superset_of_graph():
