@@ -2,7 +2,7 @@ PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
 .PHONY: verify test bench-graph bench-serve bench-train bench-coldstart \
-	sharded-autoscale smoke trace chaos
+	bench-rollout sharded-autoscale smoke trace chaos
 
 # tier-1 gate: full test suite + graph-build perf smoke
 verify: test bench-graph
@@ -33,6 +33,13 @@ sharded-autoscale:
 	cd benchmarks && PYTHONPATH=../src $(PY) bench_serve.py --smoke \
 		--only sharded_autoscale --shard-devices 2 \
 		--json /tmp/bench_sharded.json
+
+# transient-rollout engine: interleaved slot-table rollouts vs naive
+# per-step resubmission (the bench asserts >= 2x steps/sec) plus the
+# error-growth-vs-step curve; see README "Rollout serving"
+bench-rollout:
+	cd benchmarks && PYTHONPATH=../src $(PY) bench_rollout.py --smoke \
+		--json /tmp/bench_rollout.json
 
 # training step: single-device scan vs shard_map partition-parallel
 bench-train:

@@ -1,0 +1,161 @@
+"""Transient-rollout engine bench -> BENCH_rollout.json.
+
+Measures the two things the prefill/insert/generate refactor is for:
+
+  throughput
+          K concurrent T-step rollouts through the slot table (prefill
+          once per rollout, then jitted lax.scan flushes advancing all
+          lanes) vs **naive resubmission** — the pre-refactor way to get a
+          rollout out of a single-shot server: T sequential one-step
+          requests per rollout, each re-sampling, re-building the
+          multi-scale graph and re-featurizing from scratch. Steady-state
+          physics steps/sec for both; asserts the engine is >= 2x naive
+          (it amortizes the graph build T-fold AND batches concurrent
+          rollouts as vmap lanes, so the bar is conservative).
+  error_growth
+          autoregressive stability: two trajectories from the same cloud,
+          one seeded with a small gaussian perturbation of the initial
+          state (residual integration + state feedback so errors can
+          compound), relative L2 divergence recorded at every step. This
+          is the curve MGN-style training noise (``--noise-std``) exists
+          to flatten — the bench records it so regressions in rollout
+          stability are visible, it does not assert a shape.
+
+Timings exclude the one-time program compiles (both paths are warmed
+first). CPU-functional numbers, not TPU numbers.
+
+Usage:
+  PYTHONPATH=../src python bench_rollout.py [--smoke] [--json OUT.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from common import emit
+
+from repro.configs.base import GNNConfig
+from repro.core.graph_build import sample_surface
+from repro.data import geometry as geo
+from repro.launch.serve_gnn import GNNServer
+
+
+def _cfg(levels, **kw):
+    return GNNConfig().reduced().replace(levels=levels, **kw)
+
+
+def _clouds(k, n):
+    out = []
+    for i in range(k):
+        verts, faces = geo.car_surface(geo.sample_params(i))
+        out.append(sample_surface(verts, faces, n,
+                                  np.random.default_rng(i)))
+    return out
+
+
+def bench_throughput(cfg, bucket, k, steps, rows, report):
+    verts, faces = geo.car_surface(geo.sample_params(0))
+    clouds = _clouds(k, bucket)
+    srv = GNNServer(cfg, (bucket,), max_batch=1, seed=0)
+    eng = srv.rollout_engine()
+    # warm both programs (prefill + generate + insert) outside the timing
+    assert srv.rollout(verts, faces, bucket, steps=1,
+                       cloud=clouds[0]).error is None
+
+    t0 = time.perf_counter()
+    for c in clouds:
+        state = np.zeros((bucket, cfg.node_out), np.float32)
+        for _ in range(steps):
+            res = srv.rollout(verts, faces, bucket, steps=1, cloud=c,
+                              init_state=state)
+            assert res.error is None
+            state = res.fields
+    naive_s = time.perf_counter() - t0
+    naive_sps = k * steps / naive_s
+
+    t0 = time.perf_counter()
+    rids = [eng.submit(verts, faces, bucket, steps=steps, cloud=c)
+            for c in clouds]
+    eng.run_until_complete()
+    for rid in rids:
+        assert eng.result(rid, drive=False).error is None
+    inter_s = time.perf_counter() - t0
+    inter_sps = k * steps / inter_s
+
+    speedup = inter_sps / naive_sps
+    rows.append((f"rollout_naive_sps_b{bucket}", 1e6 / naive_sps,
+                 f"{naive_sps:.1f} steps/s (re-prefill every step)"))
+    rows.append((f"rollout_engine_sps_b{bucket}", 1e6 / inter_sps,
+                 f"{inter_sps:.1f} steps/s ({k} interleaved rollouts)"))
+    rows.append((f"rollout_speedup_b{bucket}", 0.0, f"{speedup:.1f}x"))
+    report["throughput"] = {
+        "bucket": bucket, "rollouts": k, "steps": steps,
+        "naive_steps_per_s": naive_sps,
+        "interleaved_steps_per_s": inter_sps,
+        "speedup": speedup,
+    }
+    assert speedup >= 2.0, (
+        f"rollout engine only {speedup:.2f}x over naive resubmission "
+        f"({inter_sps:.1f} vs {naive_sps:.1f} steps/s) — the prefill "
+        "amortization regressed")
+
+
+def bench_error_growth(cfg, bucket, steps, eps, rows, report):
+    cfg = cfg.replace(rollout_state_feats=True,
+                      rollout_integrator="residual")
+    verts, faces = geo.car_surface(geo.sample_params(0))
+    [cloud] = _clouds(1, bucket)
+    srv = GNNServer(cfg, (bucket,), max_batch=1, seed=0)
+    sa = np.zeros((bucket, cfg.node_out), np.float32)
+    sb = sa + np.random.default_rng(0).normal(
+        0.0, eps, sa.shape).astype(np.float32)
+    rel = []
+    for _ in range(steps):
+        sa = srv.rollout(verts, faces, bucket, steps=1, cloud=cloud,
+                         init_state=sa).fields
+        sb = srv.rollout(verts, faces, bucket, steps=1, cloud=cloud,
+                         init_state=sb).fields
+        rel.append(float(np.linalg.norm(sa - sb)
+                         / (np.linalg.norm(sa) + 1e-12)))
+    rows.append((f"rollout_relerr_step{steps}_b{bucket}", rel[-1] * 1e6,
+                 f"eps={eps:g} perturbation after {steps} steps"))
+    report["error_growth"] = {
+        "bucket": bucket, "steps": list(range(1, steps + 1)),
+        "perturbation_std": eps, "rel_err": rel,
+        "integrator": "residual", "state_feats": True,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small bucket / short rollouts (CI gate)")
+    ap.add_argument("--json", default=None,
+                    help="write the machine-readable record here")
+    ap.add_argument("--rollouts", type=int, default=None)
+    ap.add_argument("--steps", type=int, default=None)
+    args = ap.parse_args()
+
+    if args.smoke:
+        levels, bucket = (64, 128, 256), 128
+        k, steps, err_steps = args.rollouts or 4, args.steps or 8, 8
+    else:
+        levels, bucket = (256, 1024, 4096), 1024
+        k, steps, err_steps = args.rollouts or 8, args.steps or 50, 25
+
+    rows, report = [], {"mode": "smoke" if args.smoke else "full"}
+    cfg = _cfg(levels, rollout_integrator="residual")
+    bench_throughput(cfg, bucket, k, steps, rows, report)
+    bench_error_growth(_cfg(levels), bucket, err_steps, 1e-3, rows, report)
+    emit(rows)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

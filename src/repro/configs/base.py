@@ -221,9 +221,29 @@ class GNNConfig:
     keep_ckpts: int = 0            # training: retain the K newest periodic
                                    # step-tagged checkpoints; restore falls
                                    # back past a corrupt one (--keep-ckpts)
+    # transient rollouts (repro.launch.rollout): autoregressive T-step
+    # physics rollouts served prefill/insert/generate style. The state
+    # integrator is applied per step on the denormalized prediction:
+    # "direct" (state := pred, so T=1 == single-shot serving bit-for-bit)
+    # or "residual" (state := state + pred, MGN-style delta dynamics).
+    # rollout_state_feats feeds the normalized current state back into the
+    # node encoder (node_in_eff = node_in + node_out); off by default so
+    # existing checkpoints/params keep their shapes.
+    rollout_state_feats: bool = False
+    rollout_integrator: str = "direct"  # "direct" | "residual"
+    rollout_slots: int = 8              # concurrent rollouts per bucket table
+    rollout_steps_per_flush: int = 4    # lax.scan steps per generate() call
+    rollout_timeout_s: float = 0.0      # per-rollout deadline (0 = none)
+    noise_std: float = 0.0         # training: MGN-style input-noise std on
+                                   # node features (0 = bitwise-off)
     remat: bool = True             # activation checkpointing (paper SV-D)
     dtype: str = "float32"
     source: str = "arXiv X-MeshGraphNet (NVIDIA 2024)"
+
+    @property
+    def node_in_eff(self) -> int:
+        """Node-encoder input width: static features (+ state when fed back)."""
+        return self.node_in + (self.node_out if self.rollout_state_feats else 0)
 
     def replace(self, **kw) -> "GNNConfig":
         return dataclasses.replace(self, **kw)

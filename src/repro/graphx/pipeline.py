@@ -22,6 +22,62 @@ from repro.graphx.multiscale import MultiscaleSpec, multiscale_edges
 from repro.models import meshgraphnet
 
 
+def make_featurizer(cfg: GNNConfig, *,
+                    norm_in: Optional[Tuple[np.ndarray, np.ndarray]] = None):
+    """Static featurization over an already-built edge set.
+
+    Returns ``featurize(points, normals, senders, receivers, emask)`` -> a
+    graph dict ``{node_feats, edge_feats, senders, receivers, emask}``. This
+    is the step-invariant half of the pipeline — everything a T-step rollout
+    computes exactly once (prefill) and every physics step reuses.
+    """
+    in_stats = (None if norm_in is None else
+                (jnp.asarray(norm_in[0], jnp.float32),
+                 jnp.asarray(norm_in[1], jnp.float32)))
+
+    def featurize(points, normals, senders, receivers, emask):
+        # named_scope (not TraceAnnotation): rides into the HLO metadata so
+        # a jax.profiler capture labels the compiled ops by pipeline stage
+        points = points.astype(jnp.float32)
+        with jax.named_scope("graphx/featurize"):
+            feats = fx.node_input_features(points, normals, cfg.fourier_freqs)
+            if in_stats is not None:
+                feats = (feats - in_stats[0]) / in_stats[1]
+            edge_feats = fx.relative_edge_features(points, senders, receivers,
+                                                   emask)
+        return {"node_feats": feats, "edge_feats": edge_feats,
+                "senders": senders, "receivers": receivers, "emask": emask}
+
+    return featurize
+
+
+def make_step_fn(cfg: GNNConfig, *,
+                 norm_out: Optional[Tuple[np.ndarray, np.ndarray]] = None,
+                 interpret: bool = True):
+    """One physics step over a featurized graph: ``step(params, graph,
+    state)`` -> next state (N, node_out).
+
+    The per-step half of the pipeline: model forward + output denorm +
+    state integration (:func:`repro.models.meshgraphnet.step`). Single-shot
+    prediction is this from a zero state with the default ``'direct'``
+    integrator; the rollout engine scans it T times over the same graph.
+    """
+    out_stats = (None if norm_out is None else
+                 (jnp.asarray(norm_out[0], jnp.float32),
+                  jnp.asarray(norm_out[1], jnp.float32)))
+
+    def step(params, graph, state):
+        nf = graph["node_feats"]
+        with jax.named_scope("graphx/model"):
+            return meshgraphnet.step(
+                params, cfg, nf, graph["edge_feats"],
+                graph["senders"], graph["receivers"], state,
+                edge_mask=graph["emask"].astype(nf.dtype),
+                out_stats=out_stats, interpret=interpret)
+
+    return step
+
+
 def make_graph_forward(cfg: GNNConfig, *,
                        norm_in: Optional[Tuple[np.ndarray, np.ndarray]] = None,
                        norm_out: Optional[Tuple[np.ndarray, np.ndarray]] = None,
@@ -33,6 +89,13 @@ def make_graph_forward(cfg: GNNConfig, *,
     pipeline differ only in how they produce (senders, receivers, emask), so
     both wrap this one function — equivalence between them is then purely a
     property of the graphs they build.
+
+    Composed as featurize -> one physics step from a zero state: with the
+    default config (``rollout_integrator='direct'``,
+    ``rollout_state_feats=False``) the zero state is dead code and this is
+    op-for-op the plain forward pass, so single-shot serving IS the T=1
+    rollout (``tests/test_rollout.py`` pins bit-equality).
+
     Aggregation follows ``cfg.agg_impl``: all three impls (plain ``xla``
     scatter-add, receiver-``sorted`` segment reduce, ``pallas`` one-hot-MXU
     kernel) run device-side inside the jitted pipeline —
@@ -40,31 +103,14 @@ def make_graph_forward(cfg: GNNConfig, *,
     of them needs host preprocessing. ``interpret`` applies to the Pallas
     path only (True on CPU, False on real TPUs).
     """
-    in_stats = (None if norm_in is None else
-                (jnp.asarray(norm_in[0], jnp.float32),
-                 jnp.asarray(norm_in[1], jnp.float32)))
-    out_stats = (None if norm_out is None else
-                 (jnp.asarray(norm_out[0], jnp.float32),
-                  jnp.asarray(norm_out[1], jnp.float32)))
+    featurize = make_featurizer(cfg, norm_in=norm_in)
+    step = make_step_fn(cfg, norm_out=norm_out, interpret=interpret)
 
     def forward(params, points, normals, senders, receivers, emask):
-        # named_scope (not TraceAnnotation): rides into the HLO metadata so
-        # a jax.profiler capture labels the compiled ops by pipeline stage
-        points = points.astype(jnp.float32)
-        with jax.named_scope("graphx/featurize"):
-            feats = fx.node_input_features(points, normals, cfg.fourier_freqs)
-            if in_stats is not None:
-                feats = (feats - in_stats[0]) / in_stats[1]
-            edge_feats = fx.relative_edge_features(points, senders, receivers,
-                                                   emask)
-        with jax.named_scope("graphx/model"):
-            pred = meshgraphnet.apply(params, cfg, feats, edge_feats,
-                                      senders, receivers,
-                                      edge_mask=emask.astype(feats.dtype),
-                                      interpret=interpret)
-        if out_stats is not None:
-            pred = pred * out_stats[1] + out_stats[0]
-        return pred
+        graph = featurize(points, normals, senders, receivers, emask)
+        state0 = jnp.zeros(graph["node_feats"].shape[:-1] + (cfg.node_out,),
+                           jnp.float32)
+        return step(params, graph, state0)
 
     return forward
 
@@ -168,3 +214,67 @@ def make_batched_infer_fn(cfg: GNNConfig, ms: MultiscaleSpec, *,
     if donate and jax.default_backend() != "cpu":
         return jax.jit(batched, donate_argnums=(1, 2, 3))
     return jax.jit(batched)
+
+
+def make_prefill_fn(cfg: GNNConfig, ms: MultiscaleSpec, *,
+                    knn_impl: str = "xla", interpret: bool = True,
+                    norm_in: Optional[Tuple[np.ndarray, np.ndarray]] = None,
+                    jit: bool = True):
+    """Rollout prefill: ``prefill(points, normals, n_valid)`` -> graph dict.
+
+    Builds the multi-scale edge set AND the step-invariant features in one
+    jitted program — the graph-once half of graph-once/step-many. The
+    returned dict has the :func:`make_featurizer` layout and is what the
+    rollout engine parks in its device-resident slot table.
+    """
+    featurize = make_featurizer(cfg, norm_in=norm_in)
+
+    def prefill(points, normals, n_valid):
+        points = points.astype(jnp.float32)
+        with jax.named_scope("graphx/knn_edges"):
+            senders, receivers, emask = multiscale_edges(
+                points, n_valid, ms, impl=knn_impl, interpret=interpret)
+        return featurize(points, normals, senders, receivers, emask)
+
+    return jax.jit(prefill) if jit else prefill
+
+
+def make_generate_fn(cfg: GNNConfig, *, steps: int,
+                     norm_out: Optional[Tuple[np.ndarray, np.ndarray]] = None,
+                     interpret: bool = True, jit: bool = True,
+                     donate: bool = False):
+    """Rollout generate: scan ``steps`` physics steps over a slot table.
+
+    Returns ``gen(params, graph, state, remaining) -> (state', remaining')``
+    where every graph leaf carries a leading slot axis S (vmap lanes),
+    ``state`` is (S, N, node_out) and ``remaining`` (S,) int32 counts steps
+    still owed per slot. Lanes are advanced only while ``remaining > 0``
+    (finished/idle slots carry their state through unchanged), so one
+    compiled program interleaves rollouts of different lengths and
+    mid-flight arrivals. Lane independence is structural — a diverging
+    (NaN) rollout cannot leak into its neighbors.
+
+    ``donate=True`` donates state/remaining so the scan updates the slot
+    table in place on accelerators (no-op on CPU, same policy as
+    :func:`make_batched_infer_fn`).
+    """
+    step = make_step_fn(cfg, norm_out=norm_out, interpret=interpret)
+
+    def one(params, graph, state, remaining):
+        def body(carry, _):
+            st, rem = carry
+            with jax.named_scope("rollout/step"):
+                nxt = step(params, graph, st)
+            st = jnp.where(rem > 0, nxt, st)
+            rem = jnp.maximum(rem - 1, 0)
+            return (st, rem), None
+        (state, remaining), _ = jax.lax.scan(
+            body, (state, remaining), None, length=steps)
+        return state, remaining
+
+    gen = jax.vmap(one, in_axes=(None, 0, 0, 0))
+    if not jit:
+        return gen
+    if donate and jax.default_backend() != "cpu":
+        return jax.jit(gen, donate_argnums=(2, 3))
+    return jax.jit(gen)

@@ -59,7 +59,8 @@ from repro.core import halo as halo_lib
 from repro.core import partitioning
 from repro.graphx import hashgrid
 from repro.graphx.multiscale import MultiscaleSpec, multiscale_edges
-from repro.graphx.pipeline import make_graph_forward
+from repro.graphx.pipeline import (make_featurizer, make_graph_forward,
+                                   make_step_fn)
 
 _BATCH_KEYS = ("points", "normals", "level_counts", "recv_ok", "send_ok",
                "owned")
@@ -139,6 +140,21 @@ class ShardPlan:
                        shard_out.dtype)
         m = self.owned
         out[self.global_ids[m]] = shard_out[m]
+        return out
+
+    def scatter(self, values) -> np.ndarray:
+        """Spread a global (n, F) array onto the (P, Nmax, F) shard layout.
+
+        The inverse of :meth:`gather`, except every shard-local row with a
+        real global id — owned AND halo — receives its global value, which
+        is exactly what a sharded rollout step needs when the field state
+        feeds back into the node features: halo rows must carry their
+        owners' current state for the masked message passing to reproduce
+        the unsharded step. Padding rows (no global id) are zeroed.
+        """
+        values = np.asarray(values)
+        out = values[self.global_ids]
+        out[self.hop > self.spec.halo_hops] = 0
         return out
 
 
@@ -513,4 +529,69 @@ def make_sharded_infer_fn(cfg: GNNConfig, sspec: ShardSpec, mesh, *,
 
     in_specs = (P(), {k: P(axis) for k in _BATCH_KEYS})
     fn = shard_map(local, mesh=mesh, in_specs=in_specs, out_specs=P(axis))
+    return jax.jit(fn) if jit else fn
+
+
+def make_sharded_rollout_fn(cfg: GNNConfig, sspec: ShardSpec, mesh, *,
+                            steps: int, axis: str = "data",
+                            knn_impl: str = "xla", interpret: bool = True,
+                            norm_in=None, norm_out=None, jit: bool = True,
+                            pack_width: int = 1):
+    """Sharded generate: graph-once, step-``steps`` under shard_map.
+
+    Returns ``gen(params, batch, state, remaining) -> (state', remaining')``
+    where ``batch`` is ``ShardPlan.batch()`` / ``PackPlan.batch()`` arrays
+    (rollout lanes ride the pack axis G), ``state`` is
+    ``(P[, G], Nmax, node_out)`` in the shard-local layout produced by
+    ``ShardPlan.scatter``, and ``remaining`` is ``(P[, G])`` int32 (every
+    shard carries the same per-lane count). Each shard builds its halo'd
+    graph and featurizes ONCE, then scans the physics step ``steps`` times
+    — still zero collectives. Returned state is masked to owned rows.
+
+    Exactness across flushes: with ``rollout_state_feats=False`` the state
+    never re-enters message passing, so any ``steps`` per call reproduces
+    the unsharded scan on owned rows. With state feedback the halo rings
+    only cover ONE exact step — the rollout engine then clamps to
+    ``steps=1`` and re-scatters the gathered global state between flushes
+    (a host-side halo exchange).
+    """
+    featurize = make_featurizer(cfg, norm_in=norm_in)
+    step = make_step_fn(cfg, norm_out=norm_out, interpret=interpret)
+    ms = sspec.ms
+    pack_width = int(pack_width)
+
+    def one(params, b, state, remaining):
+        pts = b["points"].astype(jnp.float32)
+        s, r, em = multiscale_edges(pts, b["level_counts"], ms,
+                                    impl=knn_impl, interpret=interpret)
+        em = em & b["send_ok"][s] & b["recv_ok"][r]
+        s = jnp.where(em, s, 0)
+        r = jnp.where(em, r, 0)
+        graph = featurize(pts, b["normals"], s, r, em)
+
+        def body(carry, _):
+            st, rem = carry
+            with jax.named_scope("rollout/step"):
+                nxt = step(params, graph, st)
+            st = jnp.where(rem > 0, nxt, st)
+            rem = jnp.maximum(rem - 1, 0)
+            return (st, rem), None
+
+        (state, remaining), _ = jax.lax.scan(
+            body, (state, remaining), None, length=steps)
+        return state * b["owned"][:, None].astype(state.dtype), remaining
+
+    def local(params, batch, state, remaining):
+        b = {k: v[0] for k, v in batch.items()}   # strip the shard axis
+        st, rem = state[0], remaining[0]
+        if pack_width > 1:
+            out, rem2 = jax.vmap(
+                lambda bg, sg, rg: one(params, bg, sg, rg))(b, st, rem)
+        else:
+            out, rem2 = one(params, b, st, rem)
+        return out[None], rem2[None]
+
+    in_specs = (P(), {k: P(axis) for k in _BATCH_KEYS}, P(axis), P(axis))
+    fn = shard_map(local, mesh=mesh, in_specs=in_specs,
+                   out_specs=(P(axis), P(axis)))
     return jax.jit(fn) if jit else fn

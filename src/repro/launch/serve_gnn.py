@@ -560,6 +560,7 @@ class GNNServer:
         self._worker_dead = False         # supervision gave up: every submit
                                           # resolves to an immediate error
         self._restarts = 0
+        self._rollout = None              # lazy RolloutEngine (rollout_engine)
         self._mesh = (mesh_for_shards(self.shard_devices)
                       if self.shard_devices > 1 else None)
         # grid specs are calibrated from a reference geometry representative
@@ -1940,6 +1941,42 @@ class GNNServer:
                 trace_id=f"req-{request_id}")
         return out
 
+    # ------------------------------------------------------------- rollouts
+
+    def rollout_engine(self, **kw):
+        """The server's transient-rollout engine (lazily constructed).
+
+        One engine per server: it shares the bucket ladder, calibration
+        caches, request-id space, telemetry registry and resilience knobs
+        (see ``repro.launch.rollout``). Keyword overrides (``slots``,
+        ``steps_per_flush``) apply only on first construction.
+        """
+        if self._rollout is None:
+            from repro.launch.rollout import RolloutEngine
+            self._rollout = RolloutEngine(self, **kw)
+        return self._rollout
+
+    def submit_rollout(self, verts: np.ndarray, faces: np.ndarray,
+                       n_points: Optional[int] = None, *, steps: int = 1,
+                       **kw) -> int:
+        """Enqueue a T-step rollout; returns its id (see
+        ``RolloutEngine.submit``). Collect with ``rollout_result``."""
+        return self.rollout_engine().submit(verts, faces, n_points,
+                                            steps=steps, **kw)
+
+    def rollout_result(self, rollout_id: int):
+        """Drive the engine until ``rollout_id`` resolves; returns its
+        ``RolloutResult``."""
+        return self.rollout_engine().result(rollout_id)
+
+    def rollout(self, verts: np.ndarray, faces: np.ndarray,
+                n_points: Optional[int] = None, *, steps: int = 1, **kw):
+        """Synchronous convenience: submit one rollout and drive it to
+        completion. Single-shot serving is exactly ``steps=1`` from a zero
+        state (bit-equal under the default config — pinned in tests)."""
+        rid = self.submit_rollout(verts, faces, n_points, steps=steps, **kw)
+        return self.rollout_result(rid)
+
     def _worker_main(self):
         """Worker supervisor: restart a crashed ``_serve_loop`` with capped
         exponential backoff; past the restart budget mark the server dead.
@@ -2102,6 +2139,25 @@ def main():
                     help="per-request deadline in seconds; requests that "
                     "wait longer are dropped before any device work and "
                     "resolve to an error Result (0 = no deadline)")
+    ap.add_argument("--rollout-steps", type=int, default=0,
+                    help="serve the demo traffic as T-step autoregressive "
+                    "rollouts through the prefill/insert/generate engine "
+                    "(0 = classic single-shot serving)")
+    ap.add_argument("--rollout-slots", type=int, default=None,
+                    help="concurrent rollouts per bucket slot table "
+                    "(default cfg.rollout_slots)")
+    ap.add_argument("--steps-per-flush", type=int, default=None,
+                    help="physics steps per jitted generate flush "
+                    "(default cfg.rollout_steps_per_flush)")
+    ap.add_argument("--state-feats", action="store_true",
+                    help="feed the field state back into the node features "
+                    "(rollout_state_feats; requires params sized for it)")
+    ap.add_argument("--integrator", default=None,
+                    choices=["direct", "residual"],
+                    help="rollout state integrator (default: the config's)")
+    ap.add_argument("--rollout-timeout", type=float, default=None,
+                    help="per-rollout end-to-end deadline in seconds "
+                    "(0 = none)")
     args = ap.parse_args()
 
     cfg = GNNConfig()
@@ -2124,6 +2180,16 @@ def main():
         cfg = cfg.replace(shed_policy=args.shed_policy)
     if args.request_timeout is not None:
         cfg = cfg.replace(request_timeout_s=args.request_timeout)
+    if args.state_feats:
+        cfg = cfg.replace(rollout_state_feats=True)
+    if args.integrator is not None:
+        cfg = cfg.replace(rollout_integrator=args.integrator)
+    if args.rollout_slots is not None:
+        cfg = cfg.replace(rollout_slots=args.rollout_slots)
+    if args.steps_per_flush is not None:
+        cfg = cfg.replace(rollout_steps_per_flush=args.steps_per_flush)
+    if args.rollout_timeout is not None:
+        cfg = cfg.replace(rollout_timeout_s=args.rollout_timeout)
     auto = args.buckets.strip().lower() == "auto"
     buckets = "auto" if auto else \
         tuple(int(b) for b in args.buckets.split(","))
@@ -2161,6 +2227,34 @@ def main():
     for i in range(args.requests):
         verts, faces = geo.car_surface(geo.sample_params(i))
         reqs.append((verts, faces, int(rng.choice(req_sizes))))
+    if args.rollout_steps > 0:
+        server.rollout_engine()               # construct before timing
+        with server.telemetry.capture():
+            t_roll = time.perf_counter()
+            rids = [server.submit_rollout(v, f, n,
+                                          steps=args.rollout_steps)
+                    for v, f, n in reqs]
+            rollouts = [server.rollout_result(rid) for rid in rids]
+            dt = time.perf_counter() - t_roll
+        done = sum(r.steps_done for r in rollouts)
+        errs = sum(1 for r in rollouts if r.error)
+        print(f"rolled out {len(rollouts)} geometries x "
+              f"{args.rollout_steps} steps ({done} total) in {dt:.2f}s | "
+              f"{done / max(dt, 1e-9):.1f} steps/s | {errs} errors")
+        for r in rollouts[:3]:
+            cp = r.fields[:, 0]
+            print(f"  rollout {r.rollout_id}: bucket {r.bucket}, "
+                  f"steps {r.steps_done}/{r.steps}, "
+                  f"cp range [{cp.min():.2f}, {cp.max():.2f}]")
+        if args.trace_dir:
+            paths = server.telemetry.export()
+            print("telemetry artifacts: " +
+                  ", ".join(sorted(paths.values())))
+        if args.save_artifact:
+            info = server.save_artifact(args.save_artifact)
+            print(f"deploy artifact -> {info['path']} "
+                  f"(buckets {info['buckets']}, AOT {info['aot_buckets']})")
+        return
     with server.telemetry.capture():
         results = server.serve(reqs)
     rep = server.stats.report()

@@ -155,7 +155,8 @@ def train_gnn(cfg: GNNConfig, steps: int, n_samples: int,
               telemetry: Optional[Telemetry] = None,
               ckpt_every: int = 0, resume: str | None = None,
               opt_total_steps: Optional[int] = None,
-              keep_ckpts: Optional[int] = None):
+              keep_ckpts: Optional[int] = None,
+              noise_std: Optional[float] = None):
     """Train X-MeshGraphNet on partitioned synthetic DrivAerML-proxy data.
 
     ``shard_devices`` caps the partition-parallel width (``None`` = use as
@@ -176,6 +177,15 @@ def train_gnn(cfg: GNNConfig, steps: int, n_samples: int,
     cosine-schedule horizon from this invocation's ``steps`` — a resumed
     run keeps the original horizon (stored in the checkpoint) so the LR
     at step t is identical to the uninterrupted run's.
+
+    ``noise_std`` (default ``cfg.noise_std``; 0 = off) adds MGN-style
+    training noise: zero-mean gaussian perturbation of the node features
+    each step, so the model learns to damp the distribution shift its own
+    autoregressive rollout errors induce (Pfaff et al. 2020 §A.3 — the
+    rollout-stability trick the transient-rollout engine relies on).
+    Draws are seeded by the GLOBAL step, so a crash+resume reproduces the
+    identical noise sequence; ``noise_std=0`` is a bitwise no-op (pinned
+    by ``tests/test_rollout.py``).
 
     ``telemetry`` (or the config's ``telemetry``/``trace_dir`` knobs)
     records the loop's stage timings: every stage lands in the metrics
@@ -258,6 +268,8 @@ def train_gnn(cfg: GNNConfig, steps: int, n_samples: int,
 
     if keep_ckpts is None:
         keep_ckpts = int(getattr(cfg, "keep_ckpts", 0))
+    if noise_std is None:
+        noise_std = float(getattr(cfg, "noise_std", 0.0))
     skip_ctr = tel.metrics.counter(
         "train_nonfinite_steps_total",
         help="optimizer steps skipped on a nonfinite loss/grad")
@@ -285,6 +297,15 @@ def train_gnn(cfg: GNNConfig, steps: int, n_samples: int,
                     if bad is not nf:     # corrupt returns arr iff unfired
                         stacked = dict(stacked)
                         stacked["node_feats"] = jnp.asarray(bad)
+                if noise_std > 0.0:
+                    # MGN rollout-stability noise, seeded by the global
+                    # step (resume-reproducible)
+                    nf = np.asarray(stacked["node_feats"])
+                    nrng = np.random.default_rng((0xF10A7, it))
+                    stacked = dict(stacked)
+                    stacked["node_feats"] = jnp.asarray(
+                        nf + nrng.standard_normal(
+                            nf.shape).astype(nf.dtype) * noise_std)
             tp1 = time.perf_counter()
             first = it == start_step
             with tel.annotate(f"train/step{'_first' if first else ''}"):
@@ -481,6 +502,10 @@ def main():
     ap.add_argument("--profile", action="store_true",
                     help="additionally capture a full jax.profiler trace "
                     "under <trace-dir>/jax_profile")
+    ap.add_argument("--noise-std", type=float, default=None,
+                    help="MGN-style training noise: gaussian std added to "
+                    "node features each step for rollout stability "
+                    "(default: cfg.noise_std, i.e. off)")
     args = ap.parse_args()
     if args.arch == "xmgn-drivaer":
         cfg = get_config(args.arch)
@@ -499,7 +524,7 @@ def main():
                 shard_devices=args.shard_devices, telemetry=tel,
                 ckpt_every=args.ckpt_every, resume=args.resume,
                 opt_total_steps=args.total_steps,
-                keep_ckpts=args.keep_ckpts)
+                keep_ckpts=args.keep_ckpts, noise_std=args.noise_std)
             with tel.span("eval", n_samples=len(test)):
                 t0 = time.perf_counter()
                 metrics = eval_gnn(cfg, params, test, ni, no)

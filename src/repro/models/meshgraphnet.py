@@ -36,7 +36,7 @@ def init(key, cfg: GNNConfig, dtype=jnp.float32):
         return nn.mlp_init(k, [2 * h] + hidden_dims + [h], dtype, final_layernorm=True)
 
     return {
-        "node_encoder": nn.mlp_init(k_ne, [cfg.node_in] + hidden_dims + [h], dtype, final_layernorm=True),
+        "node_encoder": nn.mlp_init(k_ne, [cfg.node_in_eff] + hidden_dims + [h], dtype, final_layernorm=True),
         "edge_encoder": nn.mlp_init(k_ee, [cfg.edge_in] + hidden_dims + [h], dtype, final_layernorm=True),
         "proc_edge": nn.stacked_init(k_pe, cfg.n_mp_layers, edge_layer_init),
         "proc_node": nn.stacked_init(k_pn, cfg.n_mp_layers, node_layer_init),
@@ -143,6 +143,43 @@ def apply(params, cfg: GNNConfig, node_feats, edge_feats, senders, receivers,
     (h, e), _ = jax.lax.scan(mp_layer, (h, e), (params["proc_edge"], params["proc_node"]))
     with jax.named_scope("mgn/decode"):
         return nn.mlp(params["decoder"], h, act)
+
+
+def step(params, cfg: GNNConfig, node_feats, edge_feats, senders, receivers,
+         state, *, edge_mask: Optional[jnp.ndarray] = None, out_stats=None,
+         agg_impl: Optional[str] = None, interpret: bool = True):
+    """One autoregressive physics step: state (N, node_out) -> state'.
+
+    The reusable core of both single-shot serving (T=1 from a zero state
+    with the ``'direct'`` integrator — identical math to a plain forward)
+    and the rollout engine's ``lax.scan`` generate loop.
+
+    With ``cfg.rollout_state_feats`` the current state — normalized by
+    ``out_stats`` so it lives in the same space as the targets the decoder
+    was trained against — is appended to the static node features before
+    the encoder (the encoder must have been initialized with
+    ``cfg.node_in_eff`` inputs). ``out_stats`` is an optional
+    ``(mean, std)`` pair for the output space; the raw model prediction is
+    denormalized by it before integration.
+    """
+    feats = node_feats
+    if cfg.rollout_state_feats:
+        s = state
+        if out_stats is not None:
+            out_mu, out_sd = out_stats
+            s = (state - out_mu) / out_sd
+        feats = jnp.concatenate([feats, s.astype(feats.dtype)], axis=-1)
+    pred = apply(params, cfg, feats, edge_feats, senders, receivers,
+                 edge_mask=edge_mask, agg_impl=agg_impl, interpret=interpret)
+    if out_stats is not None:
+        out_mu, out_sd = out_stats
+        pred = pred * out_sd + out_mu
+    if cfg.rollout_integrator == "residual":
+        return state + pred
+    if cfg.rollout_integrator != "direct":
+        raise ValueError(f"unknown rollout_integrator {cfg.rollout_integrator!r} "
+                         "(expected 'direct' | 'residual')")
+    return pred
 
 
 def masked_mse(pred, target, mask, denom=None):

@@ -1,0 +1,114 @@
+"""Sharded transient-rollout equivalence checks, run in a subprocess with
+XLA_FLAGS=--xla_force_host_platform_device_count=8 (jax device count is
+locked at first init, so the main pytest process cannot do this).
+
+PR-10 acceptance: rollouts under ``shard_devices > 1`` ride the PR-9
+packing substrate (slots on the shard_map pack axis) and must match the
+unsharded engine:
+
+  A. with the default ``rollout_state_feats=False`` the field state never
+     re-enters message passing, so multi-step scans inside one flush are
+     exact: sharded (2/4 devices) T-step rollouts == unsharded to 1e-5;
+  B. with ``rollout_state_feats=True`` the halo rings cover exactly one
+     step — the engine must clamp steps_per_flush to 1 (warning pinned),
+     host-halo-exchange between flushes, and still match unsharded;
+  C. two interleaved rollouts packed into one sharded slot table each
+     match their solo run (pack-lane isolation under shard_map).
+"""
+import os
+import warnings
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import numpy as np
+
+from repro.configs.base import GNNConfig
+from repro.core.graph_build import sample_surface
+from repro.data import geometry as geo
+from repro.launch.serve_gnn import GNNServer
+
+TOL = 1e-5
+SEED = 7
+
+
+def _cfg(**kw):
+    return GNNConfig().reduced().replace(levels=(64, 128, 256),
+                                         rollout_slots=2, **kw)
+
+
+def _geom(i=0):
+    return geo.car_surface(geo.sample_params(i))
+
+
+def _cloud(n, seed=0):
+    verts, faces = _geom(seed)
+    return sample_surface(verts, faces, n, np.random.default_rng(seed))
+
+
+def _rollout(cfg, shard_devices, steps, cloud):
+    verts, faces = _geom(0)
+    srv = GNNServer(cfg, (128,), max_batch=1, seed=SEED,
+                    shard_devices=shard_devices)
+    res = srv.rollout(verts, faces, 128, steps=steps, cloud=cloud)
+    assert res.error is None, res.error
+    assert res.steps_done == steps
+    return res.fields
+
+
+def check_sharded_matches_unsharded():
+    """A. multi-step flushes, no state feedback: exact across shards."""
+    cfg = _cfg(rollout_integrator="residual", rollout_steps_per_flush=4)
+    cloud = _cloud(128)
+    want = _rollout(cfg, 1, 6, cloud)
+    assert float(np.abs(want).max()) > 1e-3     # dynamics are nontrivial
+    for p in (2, 4):
+        got = _rollout(cfg, p, 6, cloud)
+        np.testing.assert_allclose(want, got, rtol=0, atol=TOL)
+    print("A ok: sharded(2,4) == unsharded, state_feats=False")
+
+
+def check_state_feats_clamps_and_matches():
+    """B. state feedback: one exact step per flush + host halo exchange."""
+    cfg = _cfg(rollout_state_feats=True, rollout_integrator="residual",
+               rollout_steps_per_flush=4)
+    cloud = _cloud(128, seed=1)
+    want = _rollout(cfg, 1, 5, cloud)
+    verts, faces = _geom(0)
+    srv = GNNServer(cfg, (128,), max_batch=1, seed=SEED, shard_devices=2)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        eng = srv.rollout_engine()
+    assert eng.steps_per_flush == 1
+    assert any("clamping" in str(x.message) for x in w), \
+        [str(x.message) for x in w]
+    res = srv.rollout(verts, faces, 128, steps=5, cloud=cloud)
+    assert res.error is None, res.error
+    np.testing.assert_allclose(want, res.fields, rtol=0, atol=TOL)
+    print("B ok: state_feats clamp + halo exchange == unsharded")
+
+
+def check_packed_lane_isolation():
+    """C. two rollouts sharing one sharded table == each run solo."""
+    cfg = _cfg(rollout_integrator="residual")
+    verts, faces = _geom(0)
+    clouds = [_cloud(128, seed=i) for i in (2, 3)]
+    solo = []
+    for c in clouds:
+        srv = GNNServer(cfg, (128,), max_batch=1, seed=SEED, shard_devices=2)
+        solo.append(srv.rollout(verts, faces, 128, steps=4, cloud=c).fields)
+    srv = GNNServer(cfg, (128,), max_batch=1, seed=SEED, shard_devices=2)
+    eng = srv.rollout_engine()
+    rids = [eng.submit(verts, faces, 128, steps=4, cloud=c) for c in clouds]
+    eng.run_until_complete()
+    for rid, want in zip(rids, solo):
+        got = eng.result(rid)
+        assert got.error is None, got.error
+        np.testing.assert_allclose(want, got.fields, rtol=0, atol=TOL)
+    print("C ok: packed sharded lanes == solo")
+
+
+if __name__ == "__main__":
+    check_sharded_matches_unsharded()
+    check_state_feats_clamps_and_matches()
+    check_packed_lane_isolation()
+    print("ALL_OK")

@@ -1,0 +1,312 @@
+"""Transient-rollout engine (repro.launch.rollout): the prefill/insert/
+generate refactor's acceptance suite.
+
+Pinned invariants:
+
+* single-shot serving IS the T=1 rollout — ``serve()`` and a one-step
+  rollout from a zero state are **bit-equal** under the default config;
+* a T-step ``lax.scan`` rollout matches T sequential single-step rollouts
+  chained through ``init_state`` to 1e-5 (exercised with residual
+  integration + state feedback so the dynamics are nontrivial);
+* interleaved rollouts in one slot table match each rollout run solo
+  (lane isolation is structural);
+* slot-table chaos: a prefill fault, a generate-flush fault, a NaN-poisoned
+  insert and a harvest corruption each kill ONLY the affected rollout(s);
+  deadlines expire queued and mid-flight rollouts without collateral;
+* sharded + packed rollouts match unsharded to 1e-5 (subprocess, 8 forced
+  host devices — see ``_rollout_sharded_check.py``);
+* ``noise_std=0`` training is a bitwise no-op; ``noise_std>0`` perturbs.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs.base import GNNConfig
+from repro.core.graph_build import sample_surface
+from repro.data import geometry as geo
+from repro.launch.serve_gnn import GNNServer
+from repro.resilience import FAULTS
+from test_distributed import run_script
+
+TOL = 1e-5
+
+
+@pytest.fixture(autouse=True)
+def _clean_faults():
+    FAULTS.reset()
+    yield
+    FAULTS.reset()
+
+
+def _cfg(**kw):
+    return GNNConfig().reduced().replace(levels=(64, 128, 256), **kw)
+
+
+def _geom(i=0):
+    return geo.car_surface(geo.sample_params(i))
+
+
+def _cloud(n, seed=0):
+    verts, faces = _geom(seed)
+    return sample_surface(verts, faces, n, np.random.default_rng(seed))
+
+
+# ---------------------------------------------------------------------------
+# single-shot == T=1 rollout (bit-equal, the refactor's keystone)
+# ---------------------------------------------------------------------------
+
+def test_single_shot_is_t1_rollout_bit_equal():
+    """The serving forward pass is featurize + one step from a zero state,
+    and rollout ids share the server's request-id space — so a fresh
+    same-seed server's T=1 rollout reproduces ``serve()`` bit for bit."""
+    verts, faces = _geom(0)
+    sa = GNNServer(_cfg(), (128,), max_batch=2, seed=0)
+    [want] = sa.serve([(verts, faces, 128)])
+    sb = GNNServer(_cfg(), (128,), max_batch=2, seed=0)
+    got = sb.rollout(verts, faces, 128, steps=1)
+    assert want.error is None and got.error is None
+    assert got.steps_done == 1
+    np.testing.assert_array_equal(want.points, got.points)
+    np.testing.assert_array_equal(want.fields, got.fields)
+
+
+# ---------------------------------------------------------------------------
+# scan rollout == sequential stepping
+# ---------------------------------------------------------------------------
+
+def test_scan_rollout_matches_sequential_stepping():
+    """20 steps inside jitted lax.scan flushes == 20 single-step rollouts
+    chained by hand through init_state, on one fixed cloud. Residual
+    integration + state feedback make every step depend on the last."""
+    T = 20
+    cfg = _cfg(rollout_state_feats=True, rollout_integrator="residual",
+               rollout_steps_per_flush=4)
+    verts, faces = _geom(0)
+    pts, nrm = _cloud(128)
+    srv = GNNServer(cfg, (128,), max_batch=2, seed=0)
+    scan = srv.rollout(verts, faces, 128, steps=T, cloud=(pts, nrm))
+    assert scan.error is None and scan.steps_done == T
+
+    state = np.zeros((128, cfg.node_out), np.float32)
+    for _ in range(T):
+        res = srv.rollout(verts, faces, 128, steps=1, cloud=(pts, nrm),
+                          init_state=state)
+        assert res.error is None
+        state = res.fields
+    np.testing.assert_allclose(scan.fields, state, rtol=0, atol=TOL)
+    # residual dynamics actually evolve (the equivalence is not 0 == 0)
+    assert float(np.abs(state).max()) > 1e-3
+    # the step counter saw exactly 2T advanced steps (scan run + chained run)
+    assert srv.rollout_engine()._c_steps.value == 2 * T
+
+
+def test_partial_flush_tail():
+    """steps not divisible by steps_per_flush: the remaining-counter mask
+    freezes the lane mid-flush, so a T=5, flush=4 rollout == 5 chained
+    single steps."""
+    cfg = _cfg(rollout_integrator="residual", rollout_steps_per_flush=4)
+    verts, faces = _geom(1)
+    pts, nrm = _cloud(128, seed=1)
+    srv = GNNServer(cfg, (128,), max_batch=2, seed=0)
+    got = srv.rollout(verts, faces, 128, steps=5, cloud=(pts, nrm))
+    assert got.error is None and got.steps_done == 5
+    state = np.zeros((128, cfg.node_out), np.float32)
+    for _ in range(5):
+        state = srv.rollout(verts, faces, 128, steps=1, cloud=(pts, nrm),
+                            init_state=state).fields
+    np.testing.assert_allclose(got.fields, state, rtol=0, atol=TOL)
+
+
+# ---------------------------------------------------------------------------
+# interleaving: concurrent rollouts as vmap lanes
+# ---------------------------------------------------------------------------
+
+def test_interleaved_rollouts_match_solo():
+    """Three rollouts of different lengths sharing one slot table (and one
+    mid-flight arrival) each match the same rollout run solo on a fresh
+    server. Fixed clouds pin the inputs so ids don't matter."""
+    cfg = _cfg(rollout_integrator="residual")
+    lengths = [5, 12, 20]
+    clouds = [_cloud(128, seed=i) for i in range(3)]
+    verts, faces = _geom(0)
+
+    solo = []
+    for T, c in zip(lengths, clouds):
+        srv = GNNServer(cfg, (128,), max_batch=2, seed=0)
+        solo.append(srv.rollout(verts, faces, 128, steps=T, cloud=c))
+
+    srv = GNNServer(cfg, (128,), max_batch=2, seed=0)
+    eng = srv.rollout_engine()
+    rids = [eng.submit(verts, faces, 128, steps=T, cloud=c)
+            for T, c in zip(lengths[:2], clouds[:2])]
+    eng.generate()                      # first flush with 2 lanes active
+    rids.append(eng.submit(verts, faces, 128, steps=lengths[2],
+                           cloud=clouds[2]))   # arrives mid-flight
+    eng.run_until_complete()
+    for rid, want in zip(rids, solo):
+        got = eng.result(rid)
+        assert got.error is None and got.steps_done == want.steps_done
+        np.testing.assert_allclose(want.fields, got.fields, rtol=0, atol=TOL)
+    assert eng._c_done.value == 3.0
+
+
+def test_rollouts_across_buckets():
+    """Rollouts route through the bucket ladder like single-shot requests:
+    each bucket gets its own slot table and both complete."""
+    srv = GNNServer(_cfg(), (128, 256), max_batch=2, seed=0)
+    verts, faces = _geom(0)
+    r_small = srv.rollout(verts, faces, 100, steps=3)
+    r_large = srv.rollout(verts, faces, 200, steps=3)
+    assert r_small.error is None and r_small.bucket == 128
+    assert r_large.error is None and r_large.bucket == 256
+    assert r_small.fields.shape == (128, 4)
+    assert r_large.fields.shape == (256, 4)
+
+
+# ---------------------------------------------------------------------------
+# chaos: the slot table as a fault site
+# ---------------------------------------------------------------------------
+
+def test_prefill_fault_aborts_only_that_rollout():
+    srv = GNNServer(_cfg(), (128,), max_batch=2, seed=0)
+    eng = srv.rollout_engine()
+    verts, faces = _geom(0)
+    FAULTS.arm("rollout.prefill", nth=1, times=1)
+    r1 = eng.submit(verts, faces, 128, steps=3)
+    r2 = eng.submit(verts, faces, 128, steps=3)
+    res1, res2 = eng.result(r1), eng.result(r2)
+    assert res1.error and "prefill/insert failed" in res1.error
+    assert res2.error is None and res2.steps_done == 3
+    assert eng._c_abort.value == 1.0
+    # the engine keeps serving after the fault window closes
+    assert srv.rollout(verts, faces, 128, steps=2).error is None
+
+
+def test_generate_fault_kills_only_that_table():
+    """A failed flush aborts the failing bucket's in-flight rollouts and
+    drops its (possibly donated) device table; other buckets are untouched
+    and the next insert rematerializes a fresh table."""
+    srv = GNNServer(_cfg(), (128, 256), max_batch=2, seed=0)
+    eng = srv.rollout_engine()
+    verts, faces = _geom(0)
+    FAULTS.arm("rollout.generate", nth=1, times=1)
+    r_small = eng.submit(verts, faces, 128, steps=4)   # table 128: fault
+    r_large = eng.submit(verts, faces, 200, steps=4)   # table 256: clean
+    res_s, res_l = eng.result(r_small), eng.result(r_large)
+    assert res_s.error and "generate flush failed" in res_s.error
+    assert res_l.error is None and res_l.steps_done == 4
+    # the 128 table was dropped; a new rollout rebuilds it and completes
+    again = srv.rollout(verts, faces, 128, steps=2)
+    assert again.error is None and again.steps_done == 2
+
+
+def test_nan_insert_aborts_only_its_slot():
+    """A NaN-poisoned init state diverges one lane; the nonfinite guard
+    aborts that rollout while its vmap-lane neighbor completes clean."""
+    cfg = _cfg(rollout_integrator="residual")   # residual keeps NaN alive
+    srv = GNNServer(cfg, (128,), max_batch=2, seed=0)
+    eng = srv.rollout_engine()
+    verts, faces = _geom(0)
+    FAULTS.arm("rollout.insert", mode="corrupt", nth=1, times=1)
+    r_bad = eng.submit(verts, faces, 128, steps=6)
+    r_ok = eng.submit(verts, faces, 128, steps=6)
+    res_bad, res_ok = eng.result(r_bad), eng.result(r_ok)
+    assert res_bad.error and "nonfinite" in res_bad.error
+    assert res_ok.error is None and res_ok.steps_done == 6
+    assert np.isfinite(res_ok.fields).all()
+
+
+def test_harvest_corruption_caught_by_guard():
+    srv = GNNServer(_cfg(), (128,), max_batch=2, seed=0)
+    verts, faces = _geom(0)
+    FAULTS.arm("rollout.harvest", mode="corrupt", nth=1, times=1)
+    res = srv.rollout(verts, faces, 128, steps=2)
+    assert res.error and "nonfinite output" in res.error
+    assert srv.rollout(verts, faces, 128, steps=2).error is None
+
+
+def test_deadline_expires_queued_rollout():
+    """An already-expired deadline is shed at admission, before any device
+    work."""
+    srv = GNNServer(_cfg(), (128,), max_batch=2, seed=0)
+    eng = srv.rollout_engine()
+    verts, faces = _geom(0)
+    rid = eng.submit(verts, faces, 128, steps=100, timeout_s=1e-9)
+    res = eng.result(rid)
+    assert res.error and "timed out" in res.error
+    assert res.steps_done == 0
+    assert eng._c_timeout.value == 1.0
+
+
+def test_deadline_expires_mid_flight():
+    """A deadline hit between flushes aborts the rollout with partial
+    progress; a concurrent undeadlined rollout finishes."""
+    import time
+    srv = GNNServer(_cfg(rollout_steps_per_flush=1), (128,),
+                    max_batch=2, seed=0)
+    eng = srv.rollout_engine()
+    verts, faces = _geom(0)
+    r_slow = eng.submit(verts, faces, 128, steps=10_000, timeout_s=0.2)
+    r_ok = eng.submit(verts, faces, 128, steps=2)
+    deadline = time.perf_counter() + 30.0
+    while eng.pending() and time.perf_counter() < deadline:
+        eng.generate()
+    res_slow, res_ok = eng.result(r_slow), eng.result(r_ok)
+    assert res_slow.error and "deadline expired mid-flight" in res_slow.error
+    assert 0 < res_slow.steps_done < 10_000
+    assert res_ok.error is None and res_ok.steps_done == 2
+
+
+def test_admission_rejects_beyond_queue_depth():
+    srv = GNNServer(_cfg(), (128,), max_batch=2, seed=0, max_queue_depth=1)
+    eng = srv.rollout_engine()
+    verts, faces = _geom(0)
+    r1 = eng.submit(verts, faces, 128, steps=2)
+    r2 = eng.submit(verts, faces, 128, steps=2)      # over the bound: shed
+    res2 = eng.result(r2, drive=False)
+    assert res2.error and "rejected" in res2.error
+    assert eng._c_reject.value == 1.0
+    assert eng.result(r1).error is None
+
+
+def test_rollout_telemetry_stages_recorded():
+    from repro.launch.rollout import ROLLOUT_STAGES
+    srv = GNNServer(_cfg(), (128,), max_batch=2, seed=0)
+    verts, faces = _geom(0)
+    assert srv.rollout(verts, faces, 128, steps=3).error is None
+    rep = srv.stats.report()
+    for stage in ROLLOUT_STAGES:
+        assert rep["stages"][stage]["count"] >= 1, stage
+
+
+# ---------------------------------------------------------------------------
+# sharded + packed (subprocess: forced host devices)
+# ---------------------------------------------------------------------------
+
+def test_rollout_sharded_multi_device():
+    """Sharded rollouts (shard_devices > 1, slots on the pack axis) match
+    unsharded to 1e-5 in both state-feedback modes, interleaved lanes stay
+    isolated, and the state-feats flush clamp engages — see
+    ``_rollout_sharded_check.py``."""
+    out = run_script("_rollout_sharded_check.py")
+    assert "ALL_OK" in out
+
+
+# ---------------------------------------------------------------------------
+# training noise injection (MGN rollout-stability trick)
+# ---------------------------------------------------------------------------
+
+def test_noise_std_zero_is_bitwise_noop():
+    """noise_std=0 (explicit or via cfg default) trains bit-identically to
+    the untouched path; noise_std>0 changes the learned params."""
+    from repro.launch.train import train_gnn
+    cfg = GNNConfig().reduced().replace(levels=(32, 64))
+    p0, _, _ = train_gnn(cfg, 2, 2, None, noise_std=0.0)
+    p1, _, _ = train_gnn(cfg, 2, 2, None)          # default: cfg.noise_std=0
+    p2, _, _ = train_gnn(cfg, 2, 2, None, noise_std=0.05)
+    l0 = jax.tree_util.tree_leaves(p0)
+    l1 = jax.tree_util.tree_leaves(p1)
+    l2 = jax.tree_util.tree_leaves(p2)
+    assert all(np.array_equal(a, b) for a, b in zip(l0, l1))
+    assert any(not np.array_equal(a, b) for a, b in zip(l0, l2))
